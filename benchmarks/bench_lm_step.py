@@ -1,0 +1,54 @@
+"""Per-architecture reduced-config step timings on CPU (framework health
+metric — the full-scale numbers live in the dry-run roofline table)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row, time_fn
+from repro.configs import get_smoke, list_archs
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.train.optim import AdamWConfig, adamw_init
+
+
+def run() -> List[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    B, S = 2, 32
+    for arch in list_archs():
+        cfg = get_smoke(arch)
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        opt_state = adamw_init(params)
+        step = jax.jit(make_train_step(cfg, AdamWConfig(total_steps=10)),
+                       donate_argnums=(0, 1))
+        batch = {"tokens": jnp.asarray(
+                     rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+                 "labels": jnp.asarray(
+                     rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+        if cfg.prefix_len:
+            batch["prefix_embeds"] = jnp.asarray(
+                rng.normal(size=(B, cfg.prefix_len, cfg.d_model)),
+                jnp.float32)
+        params, opt_state, m = step(params, opt_state, batch)  # compile
+        jax.block_until_ready(m["loss"])
+
+        t0 = time.perf_counter()
+        iters = 3
+        for _ in range(iters):
+            params, opt_state, m = step(params, opt_state, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / iters
+        tok_s = B * S / dt
+        rows.append(fmt_row(f"lm_step/{arch}", dt * 1e6,
+                            f"tokens_per_sec={tok_s:.0f} "
+                            f"loss={float(m['loss']):.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

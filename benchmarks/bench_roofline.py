@@ -1,0 +1,46 @@
+"""Paper Fig. 1 analogue: arithmetic intensity (FLOPs/byte) per W2V
+implementation, from the analytic per-window model — the roofline x-axis
+the paper uses to show FULL-W2V's climb out of the memory-bound region.
+
+FLOPs per window are IDENTICAL across implementations (same math):
+  corr K×(N+1)×d ×2, sigmoid ≈ 4·K·(N+1), two update GEMMs ×2 each
+Bytes differ by reuse policy (bench_memory traffic model) — so intensity
+ratios equal traffic ratios, exactly the paper's Figure 1 structure.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import fmt_row, traffic_per_window
+
+W_F, N_NEG, DIM = 3, 5, 128
+
+
+def window_flops(w_f: int = W_F, n: int = N_NEG, d: int = DIM) -> float:
+    k, m = 2 * w_f, n + 1
+    gemms = 3 * 2 * k * m * d          # corr + d_ctx + d_out
+    sigm = 4 * k * m
+    return gemms + sigm
+
+
+def run() -> List[str]:
+    rows = []
+    fl = window_flops()
+    intens = {}
+    for impl in ["naive", "matrix", "full_register", "fullw2v"]:
+        b = traffic_per_window(impl, W_F, N_NEG, DIM) * 4
+        intens[impl] = fl / b
+        rows.append(fmt_row(f"roofline/{impl}", 0.0,
+                            f"flops_per_byte={fl / b:.3f}"))
+    rows.append(fmt_row(
+        "roofline/intensity_gain_vs_naive", 0.0,
+        f"gain={intens['fullw2v'] / intens['naive']:.1f}x "
+        f"(paper: 16-24x vs GPU baselines)"))
+    # v5e ridge point: 197e12 / 819e9 ≈ 241 flops/byte — W2V stays
+    # memory-bound; the win is moving bytes out of HBM into VMEM reuse.
+    rows.append(fmt_row("roofline/v5e_ridge", 0.0, "flops_per_byte=240.5"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

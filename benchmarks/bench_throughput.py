@@ -1,0 +1,81 @@
+"""Paper Fig. 6/7 analogue: training throughput (words/sec) per
+implementation on the same synthetic corpus.
+
+Implementations (DESIGN.md §6): naive (accSGNS-like), matrix
+(pWord2Vec-like), FULL-W2V jnp oracle, FULL-W2V Pallas kernel
+(interpret mode — correctness-speed only on CPU, hence benchmarked on a
+reduced slice and reported separately).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+from benchmarks.common import bench_cfg, bench_pipeline, fmt_row
+from repro.core.baselines import matrix_sgns, naive_sgns
+from repro.kernels import ops
+
+
+def run() -> List[str]:
+    pipe, cfg, _ = bench_pipeline(vocab=2000, sentences=256)
+    w_f = cfg.fixed_window
+    batches = list(pipe.batches(pad_len=64))
+    rows = []
+
+    impls = {
+        "naive_accSGNS_like": lambda wi, wo, b: naive_sgns(
+            wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
+            jnp.asarray(b.lengths), jnp.float32(0.025), w_f),
+        "matrix_pWord2Vec_like": lambda wi, wo, b: matrix_sgns(
+            wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
+            jnp.asarray(b.lengths), jnp.float32(0.025), w_f),
+        "fullw2v_jnp": lambda wi, wo, b: ops.sgns_batch_update(
+            wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
+            jnp.asarray(b.lengths), jnp.float32(0.025), w_f, backend="jnp"),
+    }
+
+    for name, fn in impls.items():
+        from repro.core.trainer import init_state
+        st = init_state(pipe.vocab.size, cfg)
+        wi, wo = st.w_in, st.w_out
+        # warmup (compile)
+        wi, wo = fn(wi, wo, batches[0])
+        wi.block_until_ready()
+        # the naive per-pair baseline is ~1000x slower on CPU: measure a
+        # single batch for it, the full set for the fast impls
+        bench_batches = batches[:1] if name.startswith("naive") else batches
+        t0 = time.perf_counter()
+        words = 0
+        for b in bench_batches:
+            wi, wo = fn(wi, wo, b)
+            words += b.n_words
+        wi.block_until_ready()
+        dt = time.perf_counter() - t0
+        rows.append(fmt_row(f"throughput/{name}",
+                            dt / max(len(bench_batches), 1) * 1e6,
+                            f"words_per_sec={words / dt:.0f}"))
+
+    # Pallas interpret mode: one small batch (it is a Python interpreter)
+    from repro.core.trainer import init_state
+    st = init_state(pipe.vocab.size, cfg)
+    small = batches[0]
+    sl = slice(0, 8)
+    t0 = time.perf_counter()
+    wi, wo = ops.sgns_batch_update(
+        st.w_in, st.w_out, jnp.asarray(small.tokens[sl]),
+        jnp.asarray(small.negs[sl]), jnp.asarray(small.lengths[sl]),
+        jnp.float32(0.025), w_f, backend="pallas_interpret")
+    wi.block_until_ready()
+    dt = time.perf_counter() - t0
+    words = int(small.lengths[sl].sum())
+    rows.append(fmt_row("throughput/fullw2v_pallas_interpret",
+                        dt * 1e6,
+                        f"words_per_sec={words / dt:.0f}"
+                        f" (interpret-mode: correctness only)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

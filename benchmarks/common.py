@@ -1,0 +1,73 @@
+"""Shared helpers for the benchmark suite.
+
+CPU-container caveat (DESIGN.md §6): wall-clock numbers here are CPU
+numbers — meaningful *relative to each other* (the paper's Fig 6 story),
+while the memory-demand and arithmetic-intensity tables are analytic/HLO
+derived and runtime-independent (the paper's Table 4 / Fig 1 story).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.w2v import W2VConfig
+from repro.data.batching import BatchingPipeline
+from repro.data.corpus import synthetic_cluster_corpus, synthetic_zipf_corpus
+
+
+def bench_cfg(**kw) -> W2VConfig:
+    base = dict(dim=128, window=5, negatives=5, epochs=1, min_count=1,
+                subsample_t=0.0, sentences_per_batch=256,
+                max_sentence_len=64)
+    base.update(kw)
+    return W2VConfig(**base)
+
+
+def bench_pipeline(vocab=2000, sentences=2048, seed=0,
+                   cfg: W2VConfig | None = None):
+    cfg = cfg or bench_cfg()
+    corpus = synthetic_zipf_corpus(vocab_size=vocab, n_sentences=sentences,
+                                   mean_len=24, seed=seed)
+    return BatchingPipeline(corpus, cfg), cfg, corpus
+
+
+def time_fn(fn: Callable[[], None], warmup: int = 1, iters: int = 3
+            ) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-window HBM traffic model (paper Fig. 3 / Table 4 analogue).
+# Counts embedding-row float traffic to/from HBM per context window.
+# ---------------------------------------------------------------------------
+def traffic_per_window(impl: str, w_f: int, n_neg: int, d: int) -> float:
+    k = 2 * w_f           # context words per window
+    m = n_neg + 1         # output rows per window
+    if impl == "naive":            # accSGNS-like: RW per *pair*
+        return (2 * d + 2 * d) * k * m
+    if impl == "matrix":           # pWord2Vec-like: RW per window
+        return 2 * d * k + 2 * d * m
+    if impl == "full_register":    # negatives cached for their window only
+        # ctx rows still RW per window; out rows RW once per window
+        return 2 * d * k + 2 * d * m
+    if impl == "fullw2v":          # lifetime ring buffer: ctx RW once/lifetime
+        return 2 * d * 1 + 2 * d * m      # amortized: 1 ctx row per slide
+    raise ValueError(impl)
+
+
+def epoch_traffic_gb(impl: str, words: int, w_f: int, n_neg: int,
+                     d: int) -> float:
+    """Bytes per epoch (f32 rows), one window per corpus word."""
+    return traffic_per_window(impl, w_f, n_neg, d) * 4 * words / 1e9

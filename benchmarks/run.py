@@ -1,0 +1,56 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  bench_throughput  — Fig. 6/7  (training words/sec per implementation)
+  bench_memory      — Table 4   (per-epoch memory demand per implementation)
+  bench_quality     — Table 7   (embedding quality equivalence)
+  bench_batching    — Table 1   (host batching speed)
+  bench_roofline    — Fig. 1    (arithmetic intensity per implementation)
+  bench_lm_step     — (this repo) per-arch reduced-config step timings
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only <name>]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_batching,
+        bench_lm_step,
+        bench_memory,
+        bench_quality,
+        bench_roofline,
+        bench_throughput,
+    )
+    suites = {
+        "roofline": bench_roofline,
+        "memory": bench_memory,
+        "batching": bench_batching,
+        "throughput": bench_throughput,
+        "quality": bench_quality,
+        "lm_step": bench_lm_step,
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in suites.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},nan,ERROR")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Data-parallel Hogwild W2V (the paper's multi-GPU future-work, on a JAX
+mesh): sentences shard over the `data` axis, each device runs the
+sequential FULL-W2V pass on its shard, table replicas are averaged every
+batch. Re-executes itself with 4 fake host devices.
+
+    PYTHONPATH=src python examples/distributed_w2v.py
+"""
+import os
+import subprocess
+import sys
+
+
+def main() -> None:
+    if os.environ.get("_W2V_DIST_CHILD") != "1":
+        env = dict(os.environ)
+        env["_W2V_DIST_CHILD"] = "1"
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=4")
+        sys.exit(subprocess.call([sys.executable, __file__], env=env))
+
+    import jax
+    import numpy as np
+
+    from repro.configs.w2v import smoke
+    from repro.core.quality import evaluate
+    from repro.core.trainer import W2VTrainer
+    from repro.data.batching import BatchingPipeline
+    from repro.data.corpus import synthetic_cluster_corpus
+    from repro.launch.mesh import make_host_mesh
+
+    print("devices:", jax.device_count())
+    cfg = smoke(epochs=5, dim=32, sentences_per_batch=64)
+    corpus = synthetic_cluster_corpus(n_clusters=8, words_per_cluster=16,
+                                      n_sentences=800, mean_len=12, seed=0)
+    pipe = BatchingPipeline(corpus, cfg)
+    mesh = make_host_mesh(model=1)          # (data=4,)
+    trainer = W2VTrainer(pipe, cfg, backend="jnp", mesh=mesh)
+    trainer.train()
+    print(f"throughput: {trainer.words_per_sec:,.0f} words/s over "
+          f"{mesh.devices.size} devices")
+    inv = np.zeros(pipe.vocab.size, dtype=int)
+    for w, i in pipe.vocab.ids.items():
+        inv[i] = corpus.clusters[w]
+    print("quality:", {k: round(v, 3)
+                       for k, v in evaluate(trainer.embeddings(), inv).items()})
+
+
+if __name__ == "__main__":
+    main()

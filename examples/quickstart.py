@@ -1,0 +1,40 @@
+"""Quickstart: train FULL-W2V embeddings on a synthetic clustered corpus,
+then inspect nearest neighbours and quality metrics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.w2v import smoke
+from repro.core.quality import evaluate
+from repro.core.trainer import W2VTrainer
+from repro.data.batching import BatchingPipeline
+from repro.data.corpus import synthetic_cluster_corpus
+
+
+def main() -> None:
+    cfg = smoke(epochs=8, dim=32)
+    corpus = synthetic_cluster_corpus(n_clusters=8, words_per_cluster=16,
+                                      n_sentences=800, mean_len=12, seed=0)
+    pipe = BatchingPipeline(corpus, cfg)
+    print(f"vocab={pipe.vocab.size} words/epoch={pipe.epoch_words}")
+
+    trainer = W2VTrainer(pipe, cfg, backend="jnp")
+    trainer.train()
+    print(f"throughput: {trainer.words_per_sec:,.0f} words/sec (CPU, jnp)")
+
+    # ground-truth clusters mapped through vocab ids
+    inv = np.zeros(pipe.vocab.size, dtype=int)
+    for w, i in pipe.vocab.ids.items():
+        inv[i] = corpus.clusters[w]
+    print("quality:", {k: round(v, 3)
+                       for k, v in evaluate(trainer.embeddings(), inv).items()})
+
+    for wid in (0, 20, 40):
+        nn = trainer.nearest(wid, k=4)
+        print(f"word {wid} (cluster {inv[wid]}) -> neighbours "
+              f"{[(int(n), int(inv[n])) for n in nn]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from repro.configs.base import (
+    SHAPES,
+    ArchConfig,
+    InputShape,
+    MoEConfig,
+    SSMConfig,
+    cells,
+    get_arch,
+    get_smoke,
+    list_archs,
+)
+from repro.configs.w2v import W2VConfig
+
+__all__ = [
+    "SHAPES", "ArchConfig", "InputShape", "MoEConfig", "SSMConfig",
+    "cells", "get_arch", "get_smoke", "list_archs", "W2VConfig",
+]

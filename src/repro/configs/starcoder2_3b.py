@@ -1,0 +1,28 @@
+"""starcoder2-3b — dense, GQA kv=2, RoPE.
+
+[arXiv:2402.19173; hf] 30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152.
+"""
+from repro.configs.base import ArchConfig, register, shrink
+
+CONFIG = register(
+    ArchConfig(
+        name="starcoder2-3b",
+        family="dense",
+        n_layers=30,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=2,
+        d_ff=12288,
+        vocab=49152,
+    ),
+    smoke=lambda: shrink(
+        CONFIG,
+        name="starcoder2-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab=256,
+    ),
+)

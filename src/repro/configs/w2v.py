@@ -1,0 +1,40 @@
+"""Word2Vec (FULL-W2V) hyperparameter config — the paper's own workload.
+
+Defaults follow the paper's evaluation setup (§5.1): d=128, N=5, W=5
+(=> fixed W_f = ceil(W/2) = 3), lr=0.025 linear decay, subsample t=1e-4,
+min_count=5, max sentence length 1000, S=10k sentences per batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class W2VConfig:
+    dim: int = 128
+    window: int = 5                 # W; the kernel uses fixed W_f = ceil(W/2)
+    negatives: int = 5              # N
+    lr: float = 0.025
+    min_lr_frac: float = 1e-4       # linear decay floor (fraction of lr)
+    epochs: int = 20
+    min_count: int = 5
+    subsample_t: float = 1e-4
+    max_sentence_len: int = 1000
+    sentences_per_batch: int = 10_000  # S (paper §4.2)
+    ignore_delimiters: bool = False    # paper §4.1 stream-packing mode
+    neg_table_size: int = 1 << 20
+    seed: int = 0
+
+    @property
+    def fixed_window(self) -> int:
+        """W_f = ceil(W/2) — FULL-W2V's fixed context width (§3.2)."""
+        return (self.window + 1) // 2
+
+
+# Reduced config for CPU tests / examples.
+def smoke(**kw) -> W2VConfig:
+    base = dict(dim=32, window=3, negatives=3, epochs=1,
+                min_count=1, sentences_per_batch=64, max_sentence_len=64,
+                subsample_t=0.0)  # tiny corpora: every word is "frequent"
+    base.update(kw)
+    return W2VConfig(**base)

@@ -1,0 +1,77 @@
+"""Canonical SGNS (skip-gram negative sampling) window math.
+
+This module defines the *semantics* that every implementation in this repo
+(pure-jnp oracle, Pallas kernel, baselines, distributed trainer) must agree
+on. FULL-W2V (paper §3.1) exploits that within one context window every
+(context-word × output-row) pairing commutes; following pWord2Vec (shared
+negatives, which the paper adopts) we therefore compute every pairing from
+the *pre-window* values and apply the accumulated deltas at window end. That
+makes the window update exactly two small GEMMs — the TPU-native expression
+of the paper's register/shared-memory pairing loop (DESIGN.md §2).
+
+Window update, given
+  C_in  : (K, d)    context-word input rows (K = 2·W_f, masked at edges)
+  M_out : (N+1, d)  output rows: [target, negative_1 .. negative_N]
+  label : (N+1,)    [1, 0, ..., 0]
+is
+  corr  = C_in @ M_out^T                  (K, N+1)
+  g     = lr * (label - sigmoid(corr))    (K, N+1), zeroed where ctx invalid
+  dC_in = g @ M_out                       (K, d)
+  dM_out= g^T @ C_in                      (N+1, d)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def stable_sigmoid(x: jax.Array) -> jax.Array:
+    """Numerically stable logistic; matches jax.nn.sigmoid but spelled out so
+    the Pallas kernel can use the identical formula."""
+    return jnp.where(
+        x >= 0,
+        1.0 / (1.0 + jnp.exp(-x)),
+        jnp.exp(x) / (1.0 + jnp.exp(x)),
+    )
+
+
+def window_delta(
+    ctx: jax.Array,        # (K, d) f32 — pre-window context input rows
+    out_rows: jax.Array,   # (N+1, d) f32 — pre-window output rows
+    ctx_mask: jax.Array,   # (K,) bool — which context slots are real words
+    lr: jax.Array,         # scalar
+) -> Tuple[jax.Array, jax.Array]:
+    """Return (d_ctx (K,d), d_out (N+1,d)) for one shared-negative window.
+
+    label vector is implicit: out_rows[0] is the positive target, the rest
+    are negatives.
+    """
+    n_out = out_rows.shape[0]
+    label = jnp.zeros((n_out,), ctx.dtype).at[0].set(1.0)
+    corr = ctx @ out_rows.T                                   # (K, N+1)
+    g = lr * (label[None, :] - stable_sigmoid(corr))          # (K, N+1)
+    g = jnp.where(ctx_mask[:, None], g, 0.0)
+    d_ctx = g @ out_rows                                      # (K, d)
+    d_out = g.T @ ctx                                         # (N+1, d)
+    return d_ctx, d_out
+
+
+def window_context_positions(t: int, w_f: int, length: int) -> list:
+    """Python helper (tests): context positions of window t."""
+    return [p for p in range(t - w_f, t + w_f + 1)
+            if p != t and 0 <= p < length]
+
+
+def pair_delta(
+    in_vec: jax.Array,   # (d,)
+    out_vec: jax.Array,  # (d,)
+    label: jax.Array,    # scalar 0/1
+    lr: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Single (input, output) pairing — building block of the naive
+    (accSGNS-style) baseline."""
+    f = stable_sigmoid(in_vec @ out_vec)
+    g = lr * (label - f)
+    return g * out_vec, g * in_vec

@@ -1,0 +1,9 @@
+from repro.data.batching import Batch, BatchingPipeline
+from repro.data.corpus import synthetic_cluster_corpus, synthetic_zipf_corpus
+from repro.data.negatives import NegativeSampler
+from repro.data.vocab import Vocab
+
+__all__ = [
+    "Batch", "BatchingPipeline", "NegativeSampler", "Vocab",
+    "synthetic_cluster_corpus", "synthetic_zipf_corpus",
+]

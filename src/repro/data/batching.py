@@ -1,0 +1,123 @@
+"""The CPU "batching" component of FULL-W2V (paper §4.1, Table 1).
+
+Responsibilities (all host-side, exactly as the paper assigns them):
+  * encode + subsample sentences,
+  * optionally ignore sentence delimiters (stream packing — paper §4.1:
+    "<0.5% additional word pairings", better utilization),
+  * pack sentences into fixed-shape (S, L) int32 batches + lengths,
+  * pre-sample per-window negatives (S, L, N) with the distinctness
+    invariant the kernel relies on.
+
+The device step consumes dense arrays only — no indirection on-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.w2v import W2VConfig
+from repro.data.corpus import Corpus
+from repro.data.negatives import NegativeSampler
+from repro.data.vocab import Vocab
+
+
+@dataclasses.dataclass
+class Batch:
+    tokens: np.ndarray    # (S, L) int32
+    negs: np.ndarray      # (S, L, N) int32
+    lengths: np.ndarray   # (S,) int32
+    n_words: int          # real (unpadded) words in the batch
+
+
+@dataclasses.dataclass
+class BatchingStats:
+    words: int = 0
+    seconds: float = 0.0
+
+    @property
+    def words_per_sec(self) -> float:
+        return self.words / self.seconds if self.seconds else float("inf")
+
+
+class BatchingPipeline:
+    def __init__(self, corpus: Corpus, cfg: W2VConfig,
+                 vocab: Optional[Vocab] = None):
+        self.cfg = cfg
+        self.corpus = corpus
+        self.vocab = vocab or Vocab.build(corpus.sentences,
+                                          min_count=cfg.min_count)
+        self.sampler = NegativeSampler(self.vocab.unigram_weights(),
+                                       seed=cfg.seed + 1)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.stats = BatchingStats()
+
+    # -- sentence stream ----------------------------------------------------
+    def _encoded_stream(self) -> Iterator[List[int]]:
+        cfg = self.cfg
+        if cfg.ignore_delimiters:
+            # stream-packing mode: concatenate the corpus and re-split into
+            # max-length pseudo-sentences (paper §4.1)
+            buf: List[int] = []
+            for s in self.corpus.sentences:
+                enc = self.vocab.subsample(self.vocab.encode(s),
+                                           cfg.subsample_t, self.rng)
+                buf.extend(enc)
+                while len(buf) >= cfg.max_sentence_len:
+                    yield buf[:cfg.max_sentence_len]
+                    buf = buf[cfg.max_sentence_len:]
+            if len(buf) > 1:
+                yield buf
+        else:
+            for s in self.corpus.sentences:
+                enc = self.vocab.subsample(self.vocab.encode(s),
+                                           cfg.subsample_t, self.rng)
+                for i in range(0, len(enc), cfg.max_sentence_len):
+                    chunk = enc[i:i + cfg.max_sentence_len]
+                    if len(chunk) > 1:
+                        yield chunk
+
+    # -- batches ------------------------------------------------------------
+    def batches(self, pad_len: Optional[int] = None) -> Iterator[Batch]:
+        """One epoch of (S, L) batches. `pad_len` fixes L (jit shape reuse);
+        default = cfg.max_sentence_len."""
+        cfg = self.cfg
+        L = pad_len or cfg.max_sentence_len
+        S = cfg.sentences_per_batch
+        toks = np.zeros((S, L), np.int32)
+        lens = np.zeros((S,), np.int32)
+        row = 0
+        for sent in self._encoded_stream():
+            t0 = time.perf_counter()
+            n = min(len(sent), L)
+            toks[row, :n] = sent[:n]
+            lens[row] = n
+            row += 1
+            self.stats.seconds += time.perf_counter() - t0
+            if row == S:
+                yield self._finalize(toks, lens)
+                toks = np.zeros((S, L), np.int32)
+                lens = np.zeros((S,), np.int32)
+                row = 0
+        if row:
+            yield self._finalize(toks[:row], lens[:row], pad_rows=S - row)
+
+    def _finalize(self, toks: np.ndarray, lens: np.ndarray,
+                  pad_rows: int = 0) -> Batch:
+        t0 = time.perf_counter()
+        negs = self.sampler.sample_batch(toks, self.cfg.negatives)
+        if pad_rows:
+            toks = np.pad(toks, ((0, pad_rows), (0, 0)))
+            negs = np.pad(negs, ((0, pad_rows), (0, 0), (0, 0)))
+            lens = np.pad(lens, (0, pad_rows))
+        n_words = int(lens.sum())
+        self.stats.seconds += time.perf_counter() - t0
+        self.stats.words += n_words
+        return Batch(tokens=toks, negs=negs, lengths=lens, n_words=n_words)
+
+    @property
+    def epoch_words(self) -> int:
+        """Approximate trainable words per epoch (post min-count)."""
+        return self.vocab.total

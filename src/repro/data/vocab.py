@@ -1,0 +1,57 @@
+"""Vocabulary construction, min-count filtering, and frequency subsampling.
+
+Follows Mikolov et al.: words with fewer than `min_count` occurrences are
+dropped (paper Table 3: min 5); frequent words are randomly discarded with
+probability 1 - sqrt(t/f(w)) (t = subsample threshold, default 1e-4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Vocab:
+    ids: Dict[Hashable, int]          # raw token -> dense id
+    counts: np.ndarray                # (V,) occurrence counts
+    total: int                        # total kept-word occurrences
+
+    @property
+    def size(self) -> int:
+        return len(self.counts)
+
+    @classmethod
+    def build(cls, sentences: Iterable[Sequence[Hashable]],
+              min_count: int = 5) -> "Vocab":
+        raw: Dict[Hashable, int] = {}
+        for s in sentences:
+            for w in s:
+                raw[w] = raw.get(w, 0) + 1
+        kept = sorted((w for w, c in raw.items() if c >= min_count),
+                      key=lambda w: (-raw[w], str(w)))
+        ids = {w: i for i, w in enumerate(kept)}
+        counts = np.array([raw[w] for w in kept], dtype=np.int64)
+        return cls(ids=ids, counts=counts, total=int(counts.sum()))
+
+    def encode(self, sentence: Sequence[Hashable]) -> List[int]:
+        return [self.ids[w] for w in sentence if w in self.ids]
+
+    def keep_probs(self, subsample_t: float) -> np.ndarray:
+        """P(keep) per word id under Mikolov subsampling."""
+        f = self.counts / max(self.total, 1)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            p = np.sqrt(subsample_t / f)
+        return np.clip(p, 0.0, 1.0)
+
+    def subsample(self, sentence: Sequence[int], subsample_t: float,
+                  rng: np.random.Generator) -> List[int]:
+        if subsample_t <= 0:
+            return list(sentence)
+        keep = self.keep_probs(subsample_t)
+        return [w for w in sentence if rng.random() < keep[w]]
+
+    def unigram_weights(self, power: float = 0.75) -> np.ndarray:
+        """The negative-sampling distribution weights f(w)^0.75."""
+        return self.counts.astype(np.float64) ** power

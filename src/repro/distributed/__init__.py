@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    axis_rules,
+    constrain,
+    current_rules,
+    param_shardings,
+)
+
+__all__ = ["axis_rules", "constrain", "current_rules", "param_shardings"]

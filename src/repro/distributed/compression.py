@@ -1,0 +1,68 @@
+"""Int8 error-feedback gradient/delta compression for cross-pod sync.
+
+Cross-pod links (DCN) are an order of magnitude slower than intra-pod ICI;
+the W2V Hogwild averaging and any cross-pod gradient reduction optionally
+compress deltas to int8 with per-tensor scale and an error-feedback
+accumulator (the residual re-enters the next round, so the scheme is
+unbiased in the long run — standard EF-SGD).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any    # pytree like the compressed tree (f32)
+
+
+def ef_init(tree: Any) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), tree))
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """f32 -> (int8, scale). Symmetric per-tensor scaling."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(tree: Any, ef: EFState) -> Tuple[Any, Any, EFState]:
+    """Returns (quantized tree, scales tree, new EF state).
+
+    The value transmitted is quantize(x + residual); the quantization error
+    is carried into the next round's residual."""
+    def one(x, r):
+        target = x.astype(jnp.float32) + r
+        q, s = quantize(target)
+        err = target - dequantize(q, s)
+        return q, s, err
+
+    qs, ss, errs = [], [], []
+    leaves, treedef = jax.tree.flatten(tree)
+    for x, r in zip(leaves, jax.tree.leaves(ef.residual)):
+        q, s, e = one(x, r)
+        qs.append(q)
+        ss.append(s)
+        errs.append(e)
+    unf = lambda ls: jax.tree.unflatten(treedef, ls)
+    return unf(qs), unf(ss), EFState(residual=unf(errs))
+
+
+def decompress_tree(qtree: Any, stree: Any) -> Any:
+    return jax.tree.map(dequantize, qtree, stree)
+
+
+def compressed_mean_bytes(tree: Any) -> Tuple[int, int]:
+    """(raw f32 bytes, compressed bytes) — reported by benchmarks."""
+    raw = sum(x.size * 4 for x in jax.tree.leaves(tree))
+    comp = sum(x.size * 1 + 4 for x in jax.tree.leaves(tree))
+    return raw, comp

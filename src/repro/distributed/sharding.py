@@ -1,0 +1,242 @@
+"""Logical-axis sharding rules with divisibility-adaptive resolution.
+
+Models annotate activations with logical axis names via ``constrain`` and
+stay mesh-agnostic; a surrounding ``axis_rules(mesh)`` context resolves the
+names to mesh axes. Resolution silently drops a mesh axis when the dimension
+is not divisible by it (e.g. starcoder2's 2 KV heads on a 16-way ``model``
+axis → replicated), so every assigned architecture shards on the production
+mesh without per-arch special cases.
+
+Parameter shardings (`param_shardings`) implement TP over ``model`` ×
+FSDP/ZeRO over ``data``; optimizer state follows parameters.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# logical name -> candidate mesh axes (first-fit by divisibility)
+DEFAULT_RULES: Dict[str, Tuple[MeshAxes, ...]] = {
+    "batch":     (("pod", "data"), ("data",)),
+    "seq":       (None,),
+    "kv_seq":    (("pod", "data"), ("data",)),   # long-context KV sharding
+    "kv_seq_model": ("model",),  # KV seq over model when kv heads can't
+    "expert_groups": (("pod", "data"), ("data",)),  # local MoE dispatch
+    "embed":     (None,),
+    "heads":     ("model",),
+    "kv_heads":  ("model",),
+    "head_dim":  ("model",),
+    "ff":        ("model",),
+    "experts":   ("model",),
+    "capacity":  (("pod", "data"), ("data",)),
+    "vocab":     ("model",),
+    "fsdp":      (("pod", "data"), ("data",)),
+    "ssm_heads": ("model",),
+    "inner":     ("model",),                     # mamba d_inner
+    "stack":     (None,),                        # scanned-layer leading dim
+    # ZeRO sharding of the replicated embed table's optimizer state
+    "vocab_opt": (("pod", "data", "model"), ("data", "model"), ("data",)),
+    "d_opt":     ("model",),
+}
+
+# Right-sized parallelism for models whose per-chip compute is too small to
+# amortize 16-way TP stream collectives: the whole mesh becomes one
+# ZeRO-data-parallel domain (EXPERIMENTS.md §Perf-hillclimb).
+PURE_DP_OVERRIDES: Dict[str, Tuple[MeshAxes, ...]] = {
+    "batch":        (("pod", "data", "model"),),
+    "fsdp":         (("pod", "data", "model"),),
+    "expert_groups": (("pod", "data", "model"),),
+    "vocab_opt":    (("pod", "data", "model"),),
+    "heads": (None,), "kv_heads": (None,), "head_dim": (None,),
+    "ff": (None,), "experts": (None,), "vocab": (None,),
+    "inner": (None,), "ssm_heads": (None,), "capacity": (None,),
+    "d_opt": (None,), "kv_seq_model": (None,),
+}
+
+
+class Rules:
+    def __init__(self, mesh: Mesh, overrides: Optional[Dict] = None):
+        self.mesh = mesh
+        self.table = dict(DEFAULT_RULES)
+        if overrides:
+            self.table.update(overrides)
+
+    def _axes_size(self, axes: MeshAxes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape.get(a, 1)
+        return size
+
+    def _present(self, axes: MeshAxes) -> MeshAxes:
+        """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on the
+        single-pod mesh)."""
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            return axes if axes in self.mesh.shape else None
+        kept = tuple(a for a in axes if a in self.mesh.shape)
+        return kept or None
+
+    # axes where GSPMD uneven sharding (implicit padding) beats replication:
+    # e.g. 24 attention heads on a 16-way model axis -> 2 (padded from 1.5)
+    # heads per device instead of 24 replicated.
+    UNEVEN_OK = frozenset({"heads", "group", "ssm_heads"})
+
+    def resolve(self, logical: Optional[str], dim: int,
+                allow_uneven: bool = True) -> MeshAxes:
+        """Pick the first candidate whose size divides `dim` (or pads, for
+        UNEVEN_OK axes — intermediates only: jit argument shardings must
+        divide exactly, so param_shardings resolves with
+        allow_uneven=False)."""
+        if logical is None:
+            return None
+        uneven = allow_uneven and logical in self.UNEVEN_OK
+        for cand in self.table.get(logical, (None,)):
+            cand = self._present(cand)
+            sz = self._axes_size(cand)
+            if sz > 1 and (dim % sz == 0 or (uneven and dim > 1)):
+                return cand
+            if cand is None or sz == 1:
+                continue
+        return None
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Sequence[int], allow_uneven: bool = True) -> P:
+        used = set()
+        parts = []
+        for name, dim in zip(logical_axes, shape):
+            axes = self.resolve(name, dim, allow_uneven)
+            # a mesh axis may appear at most once in a spec
+            if axes is not None:
+                flat = (axes,) if isinstance(axes, str) else axes
+                if any(a in used for a in flat):
+                    axes = None
+                else:
+                    used.update(flat)
+            parts.append(axes)
+        return P(*parts)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 shape: Sequence[int],
+                 allow_uneven: bool = True) -> NamedSharding:
+        return NamedSharding(self.mesh,
+                             self.spec(logical_axes, shape, allow_uneven))
+
+
+_ACTIVE: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, overrides: Optional[Dict] = None):
+    tok = _ACTIVE.set(Rules(mesh, overrides))
+    try:
+        yield _ACTIVE.get()
+    finally:
+        _ACTIVE.reset(tok)
+
+
+@contextlib.contextmanager
+def activate_rules(rules: Rules):
+    """Activate a pre-built Rules instance (e.g. serve-mode overrides)."""
+    tok = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def current_rules() -> Optional[Rules]:
+    return _ACTIVE.get()
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint if rules are active; no-op otherwise."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(logical_axes, x.shape))
+
+
+# --------------------------------------------------------------------------
+# parameter shardings (TP over 'model', FSDP over 'data')
+# --------------------------------------------------------------------------
+_PARAM_AXES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # name regex -> logical axes of the *unstacked* parameter
+    # input embed table: REPLICATED as a parameter (local gather; see
+    # models.lm.embed_lookup) but ZeRO-sharded as optimizer state
+    (r"embed$",            (None, None)),
+    (r"unembed$",          (None, "vocab")),
+    (r"wq$",               ("fsdp", "heads", "head_dim")),
+    (r"w[kv]$",            ("fsdp", "kv_heads", None)),
+    (r"wo$",               ("heads", "head_dim", "fsdp")),
+    (r"[qk]_norm$",        (None,)),
+    (r"w_router$",         (None, None)),
+    (r"we_(gate|up)$",     ("experts", "fsdp", "ff")),      # MoE experts
+    (r"we_down$",          ("experts", "ff", "fsdp")),
+    (r"w_(gate|up)$",      ("fsdp", "ff")),                 # dense SwiGLU
+    (r"w_down$",           ("ff", "fsdp")),
+    (r"w_[zx]$",           ("fsdp", "inner")),              # mamba projections
+    (r"w_(bc|dt)$",        ("fsdp", None)),
+    (r"w_out$",            ("inner", "fsdp")),              # mamba out_proj
+    (r"conv_",             None),                           # tiny -> replicate
+    (r"(A_log|D|dt_bias)$", None),
+    (r"norm$",             None),
+)
+
+
+def _leaf_logical_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    name = path.split("/")[-1]
+    for pat, axes in _PARAM_AXES:
+        if re.search(pat, name):
+            if axes is None:
+                return tuple([None] * ndim)
+            if len(axes) == ndim:
+                return axes
+            if len(axes) == ndim - 1:       # scanned (layer-stacked) leaf
+                return ("stack",) + tuple(axes)
+            return tuple([None] * ndim)
+    return tuple([None] * ndim)
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def param_shardings(params, rules: Rules, role: str = "param"):
+    """Pytree of NamedShardings matching `params` (arrays or
+    ShapeDtypeStructs). role="opt" applies ZeRO overrides (e.g. the
+    replicated embed table's m/v shard over the whole mesh)."""
+
+    def leaf_sharding(path, leaf):
+        name = _path_str(path)
+        if role == "opt" and name.split("/")[-1] == "embed":
+            logical = ("vocab_opt", "d_opt")
+        else:
+            logical = _leaf_logical_axes(name, leaf.ndim)
+        # jit arguments must shard evenly (XLA pads intermediates only)
+        return rules.sharding(logical, leaf.shape, allow_uneven=False)
+
+    return jax.tree_util.tree_map_with_path(leaf_sharding, params)

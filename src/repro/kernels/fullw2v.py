@@ -1,0 +1,467 @@
+"""FULL-W2V Pallas TPU kernel.
+
+The paper's two mechanisms, mapped to TPU (DESIGN.md §2):
+
+* *Lifetime reuse of context words* (§3.2): a VMEM scratch ring buffer of
+  ``R = 2*W_f + 1`` embedding rows mirrors the sliding window. Each context
+  row is DMA'd HBM→VMEM once when it enters the window, accumulates all its
+  updates in VMEM, and is DMA'd back exactly once when it leaves — removing
+  2W_f/(2W_f+1) of context-row HBM traffic.
+
+* *Independence of negative samples* (§3.1): the N+1 output rows of a window
+  (target + shared negatives) are DMA'd into a VMEM block, used for every
+  pairing of the window from that block (the GPU's register caching), and
+  written back once per window. Because all pairings commute, the window
+  update is expressed as two tiny GEMMs over data already resident in VMEM —
+  the MXU-native analogue of the paper's per-negative register loop.
+
+Grid = one step per sentence; the TPU grid is sequential per core, so strict
+context-window ordering (required for convergence, paper §3.1) holds by
+construction, and batch-level parallelism comes from data parallelism across
+cores/chips (Hogwild, as in the paper).
+
+Embedding tables stay in HBM (``memory_space=ANY``); rows move via explicit
+``make_async_copy`` — the TPU spelling of the paper's explicit caching.
+
+PRECONDITION (enforced by the host batching pipeline, `repro.data.negatives`,
+exactly as the paper performs negative selection on the CPU): within one
+window the N negatives are distinct from each other and from the target.
+Under this invariant the kernel is bit-identical to `kernels.ref`; with
+duplicates the kernel's per-row write-back is last-write-wins while the
+oracle scatter-adds (the GPU original has the same benign race).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128     # TPU lane width; embedding dim must be a multiple
+SUBLANE = 8    # f32 sublane tile
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _kernel(
+    # --- scalar/SMEM inputs (per sentence block) ---
+    tokens_ref,    # (1, L) int32  SMEM
+    negs_ref,      # (1, L, N) int32 SMEM
+    length_ref,    # (1,) int32 SMEM
+    lr_ref,        # (1,) f32 SMEM
+    # --- HBM (ANY) inputs, aliased to outputs ---
+    w_in_hbm,      # (V, d)
+    w_out_hbm,     # (V, d)
+    # --- outputs (aliased) ---
+    w_in_out,      # (V, d)
+    w_out_out,     # (V, d)
+    # --- scratch ---
+    ring,          # (R_pad, d) f32 VMEM — context-row ring buffer
+    ctx_blk,       # (K_pad, d) f32 VMEM — gathered window context rows
+    out_blk,       # (M_pad, d) f32 VMEM — target + negative output rows
+    sem,           # DMA semaphore
+    *,
+    w_f: int,
+    n_neg: int,
+):
+    """See module docstring; `_kernel_pipelined` adds §3.1-style prefetch."""
+    L = tokens_ref.shape[1]
+    d = w_in_hbm.shape[1]
+    r = 2 * w_f + 1
+    k = 2 * w_f                      # context slots per window
+    m = n_neg + 1                    # output rows per window
+    k_pad = ctx_blk.shape[0]
+    m_pad = out_blk.shape[0]
+    length = length_ref[0]
+    lr = lr_ref[0]
+
+    def copy(src, dst):
+        cp = pltpu.make_async_copy(src, dst, sem)
+        cp.start()
+        cp.wait()
+
+    def load_ring(q):
+        """HBM w_in row tokens[q] -> ring slot q % r."""
+        tok = tokens_ref[0, q]
+        copy(w_in_out.at[pl.ds(tok, 1)], ring.at[pl.ds(q % r, 1)])
+
+    def store_ring(p):
+        """ring slot p % r -> HBM w_in row tokens[p] (write-through output)."""
+        tok = tokens_ref[0, p]
+        copy(ring.at[pl.ds(p % r, 1)], w_in_out.at[pl.ds(tok, 1)])
+
+    # --- preload positions 0..w_f-1 ---
+    def preload(q, _):
+        @pl.when(q < length)
+        def _():
+            load_ring(q)
+        return 0
+
+    jax.lax.fori_loop(0, min(w_f, L), preload, 0, unroll=True)
+
+    # --- main sliding-window loop ---
+    def step(t, _):
+        # evict + load leading edge
+        q = t + w_f
+
+        @pl.when(q < length)
+        def _():
+            @pl.when(q - r >= 0)
+            def _():
+                store_ring(q - r)
+            load_ring(q)
+
+        # ---- gather context rows (from VMEM ring — no HBM traffic) ----
+        offs = [o for o in range(-w_f, w_f + 1) if o != 0]
+        for j, off in enumerate(offs):
+            p = t + off
+            valid = jnp.logical_and(p >= 0, p < length)
+            slot = jnp.clip(p, 0, L - 1) % r
+            row = ring[pl.ds(slot, 1), :]
+            ctx_blk[pl.ds(j, 1), :] = jnp.where(valid, row, 0.0)
+        if k_pad > k:
+            ctx_blk[pl.ds(k, k_pad - k), :] = jnp.zeros((k_pad - k, d),
+                                                        ctx_blk.dtype)
+
+        # ---- fetch output rows: target + shared negatives (paper §3.1) ----
+        tgt = tokens_ref[0, t]
+        copy(w_out_out.at[pl.ds(tgt, 1)], out_blk.at[pl.ds(0, 1)])
+        for j in range(n_neg):
+            neg = negs_ref[0, t, j]
+            copy(w_out_out.at[pl.ds(neg, 1)], out_blk.at[pl.ds(1 + j, 1)])
+        if m_pad > m:
+            out_blk[pl.ds(m, m_pad - m), :] = jnp.zeros((m_pad - m, d),
+                                                        out_blk.dtype)
+
+        # ---- the window update: two tiny GEMMs on VMEM-resident data ----
+        ctx = ctx_blk[...]                         # (k_pad, d)
+        out_rows = out_blk[...]                    # (m_pad, d)
+        corr = jax.lax.dot_general(
+            ctx, out_rows, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)    # (k_pad, m_pad)
+        # stable sigmoid, same formula as core.sgns.stable_sigmoid
+        f = jnp.where(corr >= 0,
+                      1.0 / (1.0 + jnp.exp(-corr)),
+                      jnp.exp(corr) / (1.0 + jnp.exp(corr)))
+        label = (jax.lax.broadcasted_iota(jnp.int32, (k_pad, m_pad), 1)
+                 == 0).astype(jnp.float32)
+        g = lr * (label - f)
+        # mask invalid context rows and padded output columns
+        # rebuild the static offset list with iota (no captured constants):
+        # j < w_f -> j - w_f;  j >= w_f -> j - w_f + 1 (skipping offset 0)
+        ji = jax.lax.iota(jnp.int32, k_pad)
+        offs_arr = jnp.where(ji < w_f, ji - w_f, ji - w_f + 1)
+        p_arr = t + offs_arr
+        ctx_valid = jnp.logical_and(p_arr >= 0, p_arr < length)
+        ctx_valid = jnp.logical_and(
+            ctx_valid,
+            jax.lax.iota(jnp.int32, k_pad) < k)
+        out_valid = jax.lax.iota(jnp.int32, m_pad) < m
+        g = jnp.where(ctx_valid[:, None], g, 0.0)
+        g = jnp.where(out_valid[None, :], g, 0.0)
+
+        d_ctx = jax.lax.dot_general(
+            g, out_rows, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)    # (k_pad, d)
+        d_out = jax.lax.dot_general(
+            g, ctx, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)    # (m_pad, d)
+
+        # ---- apply: context deltas accumulate in the ring buffer ----
+        for j, off in enumerate(offs):
+            p = t + off
+            slot = jnp.clip(p, 0, L - 1) % r
+            ring[pl.ds(slot, 1), :] = (ring[pl.ds(slot, 1), :]
+                                       + d_ctx[j:j + 1, :])
+
+        # ---- output rows: update in VMEM, write back once per window ----
+        out_blk[...] = out_rows + d_out
+        copy(out_blk.at[pl.ds(0, 1)], w_out_out.at[pl.ds(tgt, 1)])
+        for j in range(n_neg):
+            neg = negs_ref[0, t, j]
+            copy(out_blk.at[pl.ds(1 + j, 1)], w_out_out.at[pl.ds(neg, 1)])
+        return 0
+
+    def guarded_step(t, c):
+        @pl.when(t < length)
+        def _():
+            step(t, c)
+        return 0
+
+    jax.lax.fori_loop(0, L, guarded_step, 0)
+
+    # --- flush surviving ring entries (increasing position order) ---
+    def flush(kk, _):
+        p = length - r + kk
+
+        @pl.when(jnp.logical_and(p >= 0, p < length))
+        def _():
+            store_ring(p)
+        return 0
+
+    jax.lax.fori_loop(0, r, flush, 0, unroll=True)
+
+
+def _kernel_pipelined(
+    tokens_ref, negs_ref, length_ref, lr_ref,
+    w_in_hbm, w_out_hbm, w_in_out, w_out_out,
+    ring, ctx_blk, out_dbl, sem_ring, sem_out,
+    *, w_f: int, n_neg: int,
+):
+    """FULL-W2V kernel with §3.1-style prefetch: window t+1's target +
+    negative rows are DMA'd into the other half of a double buffer WHILE
+    window t computes — the TPU realization of the paper's "interleaving
+    memory demand and computation".
+
+    Correctness: a prefetched row whose index collides with one of window
+    t's output rows would read a stale value (window t writes it back after
+    compute). Collisions are detected at trace-recomputable scalar cost
+    (m×m index compares); colliding rows are NOT prefetched and are loaded
+    synchronously after window t's write-back instead — bit-identical
+    semantics to the sequential kernel, overlap in the common
+    (collision-free) case.
+    """
+    L = tokens_ref.shape[1]
+    d = w_in_hbm.shape[1]
+    r = 2 * w_f + 1
+    k = 2 * w_f
+    m = n_neg + 1
+    k_pad = ctx_blk.shape[0]
+    m_pad = out_dbl.shape[1]
+    length = length_ref[0]
+    lr = lr_ref[0]
+
+    def copy(src, dst, sem):
+        cp = pltpu.make_async_copy(src, dst, sem)
+        cp.start()
+        cp.wait()
+
+    def row_idx(t, j):
+        return jnp.where(j == 0, tokens_ref[0, t],
+                         negs_ref[0, t, jnp.maximum(j - 1, 0)])
+
+    def conflicts_prev(t, j):
+        """Does row j of window t collide with any output row of window
+        t-1? (t >= 1)"""
+        idx = row_idx(t, j)
+        hit = jnp.bool_(False)
+        for i in range(m):
+            hit = jnp.logical_or(hit, idx == row_idx(t - 1, i))
+        return hit
+
+    def start_prefetch(t, buf):
+        """Begin async loads of window t's non-colliding rows into half
+        `buf`."""
+        for j in range(m):
+            idx = row_idx(t, j)
+
+            @pl.when(jnp.logical_or(t == 0, ~conflicts_prev(t, j)))
+            def _():
+                pltpu.make_async_copy(
+                    w_out_out.at[pl.ds(idx, 1)],
+                    out_dbl.at[buf, pl.ds(j, 1)],
+                    sem_out.at[buf]).start()
+
+    def load_ring(q):
+        copy(w_in_out.at[pl.ds(tokens_ref[0, q], 1)],
+             ring.at[pl.ds(q % r, 1)], sem_ring)
+
+    def store_ring(p):
+        copy(ring.at[pl.ds(p % r, 1)],
+             w_in_out.at[pl.ds(tokens_ref[0, p], 1)], sem_ring)
+
+    # --- preload ring positions 0..w_f-1 and prefetch window 0 rows ---
+    def preload(q, _):
+        @pl.when(q < length)
+        def _():
+            load_ring(q)
+        return 0
+
+    jax.lax.fori_loop(0, min(w_f, L), preload, 0, unroll=True)
+
+    @pl.when(length > 0)
+    def _():
+        start_prefetch(0, 0)
+
+    def step(t, _):
+        buf = jax.lax.rem(t, 2)
+        q = t + w_f
+
+        @pl.when(q < length)
+        def _():
+            @pl.when(q - r >= 0)
+            def _():
+                store_ring(q - r)
+            load_ring(q)
+
+        # ---- wait for this window's prefetched rows / sync-load the
+        # colliding ones (window t-1's write-back already happened) ----
+        for j in range(m):
+            idx = row_idx(t, j)
+            prefetched = jnp.logical_or(t == 0, ~conflicts_prev(t, j))
+
+            @pl.when(prefetched)
+            def _():
+                pltpu.make_async_copy(
+                    w_out_out.at[pl.ds(idx, 1)],
+                    out_dbl.at[buf, pl.ds(j, 1)],
+                    sem_out.at[buf]).wait()
+
+            @pl.when(~prefetched)
+            def _():
+                copy(w_out_out.at[pl.ds(idx, 1)],
+                     out_dbl.at[buf, pl.ds(j, 1)], sem_ring)
+
+        if m_pad > m:
+            out_dbl[buf, pl.ds(m, m_pad - m), :] = jnp.zeros(
+                (m_pad - m, d), out_dbl.dtype)
+
+        # ---- overlap: begin prefetch of window t+1 into the other half ----
+        @pl.when(t + 1 < length)
+        def _():
+            start_prefetch(t + 1, 1 - buf)
+
+        # ---- gather context rows ----
+        offs = [o for o in range(-w_f, w_f + 1) if o != 0]
+        for j, off in enumerate(offs):
+            p = t + off
+            valid = jnp.logical_and(p >= 0, p < length)
+            slot = jnp.clip(p, 0, L - 1) % r
+            row = ring[pl.ds(slot, 1), :]
+            ctx_blk[pl.ds(j, 1), :] = jnp.where(valid, row, 0.0)
+        if k_pad > k:
+            ctx_blk[pl.ds(k, k_pad - k), :] = jnp.zeros((k_pad - k, d),
+                                                        ctx_blk.dtype)
+
+        # ---- window GEMMs (same math as the sequential kernel) ----
+        ctx = ctx_blk[...]
+        out_rows = out_dbl[buf]
+        corr = jax.lax.dot_general(
+            ctx, out_rows, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        f = jnp.where(corr >= 0, 1.0 / (1.0 + jnp.exp(-corr)),
+                      jnp.exp(corr) / (1.0 + jnp.exp(corr)))
+        label = (jax.lax.broadcasted_iota(jnp.int32, (k_pad, m_pad), 1)
+                 == 0).astype(jnp.float32)
+        g = lr * (label - f)
+        ji = jax.lax.iota(jnp.int32, k_pad)
+        offs_arr = jnp.where(ji < w_f, ji - w_f, ji - w_f + 1)
+        p_arr = t + offs_arr
+        ctx_valid = jnp.logical_and(p_arr >= 0, p_arr < length)
+        ctx_valid = jnp.logical_and(ctx_valid,
+                                    jax.lax.iota(jnp.int32, k_pad) < k)
+        out_valid = jax.lax.iota(jnp.int32, m_pad) < m
+        g = jnp.where(ctx_valid[:, None], g, 0.0)
+        g = jnp.where(out_valid[None, :], g, 0.0)
+        d_ctx = jax.lax.dot_general(
+            g, out_rows, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        d_out = jax.lax.dot_general(
+            g, ctx, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        for j, off in enumerate(offs):
+            p = t + off
+            slot = jnp.clip(p, 0, L - 1) % r
+            ring[pl.ds(slot, 1), :] = (ring[pl.ds(slot, 1), :]
+                                       + d_ctx[j:j + 1, :])
+
+        out_dbl[buf] = out_rows + d_out
+        for j in range(m):
+            idx = row_idx(t, j)
+            copy(out_dbl.at[buf, pl.ds(j, 1)],
+                 w_out_out.at[pl.ds(idx, 1)], sem_ring)
+        return 0
+
+    def guarded_step(t, c):
+        @pl.when(t < length)
+        def _():
+            step(t, c)
+        return 0
+
+    jax.lax.fori_loop(0, L, guarded_step, 0)
+
+    def flush(kk, _):
+        p = length - r + kk
+
+        @pl.when(jnp.logical_and(p >= 0, p < length))
+        def _():
+            store_ring(p)
+        return 0
+
+    jax.lax.fori_loop(0, r, flush, 0, unroll=True)
+
+
+def fullw2v_pallas(
+    w_in: jax.Array,     # (V, d) f32
+    w_out: jax.Array,    # (V, d) f32
+    tokens: jax.Array,   # (S, L) int32
+    negs: jax.Array,     # (S, L, N) int32
+    lengths: jax.Array,  # (S,) int32
+    lr: jax.Array,       # scalar f32
+    w_f: int,
+    interpret: bool = False,
+    pipeline: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """One FULL-W2V training pass over a batch of sentences."""
+    S, L = tokens.shape
+    n_neg = negs.shape[-1]
+    V, d = w_in.shape
+    assert d % LANE == 0, f"embedding dim {d} must be a multiple of {LANE}"
+    r = 2 * w_f + 1
+    r_pad = _round_up(r, SUBLANE)
+    k_pad = _round_up(2 * w_f, SUBLANE)
+    m_pad = _round_up(n_neg + 1, SUBLANE)
+
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape((1,))
+
+    grid = (S,)
+    if pipeline:
+        kernel = functools.partial(_kernel_pipelined, w_f=w_f, n_neg=n_neg)
+        scratch = [
+            pltpu.VMEM((r_pad, d), jnp.float32),
+            pltpu.VMEM((k_pad, d), jnp.float32),
+            pltpu.VMEM((2, m_pad, d), jnp.float32),   # double buffer
+            pltpu.SemaphoreType.DMA,                   # ring/stores
+            pltpu.SemaphoreType.DMA((2,)),             # per-half prefetch
+        ]
+    else:
+        kernel = functools.partial(_kernel, w_f=w_f, n_neg=n_neg)
+        scratch = [
+            pltpu.VMEM((r_pad, d), jnp.float32),
+            pltpu.VMEM((k_pad, d), jnp.float32),
+            pltpu.VMEM((m_pad, d), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L), lambda s: (s, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, L, n_neg), lambda s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda s: (s,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((V, d), w_in.dtype),
+            jax.ShapeDtypeStruct((V, d), w_out.dtype),
+        ],
+        scratch_shapes=scratch,
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(tokens, negs, lengths, lr_arr, w_in, w_out)
+    return out[0], out[1]

@@ -1,0 +1,55 @@
+"""Public jit'd entry points for the FULL-W2V kernel.
+
+On TPU the Pallas kernel compiles natively; on CPU (this container) it runs
+under ``interpret=True`` which executes the kernel body in Python — identical
+semantics, correctness-only speed. ``backend="jnp"`` selects the pure-jnp
+oracle (also the fastest option on CPU since it fully compiles).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.fullw2v import fullw2v_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("w_f", "backend"),
+                   donate_argnums=(0, 1))
+def sgns_batch_update(
+    w_in: jax.Array,      # (V, d) f32 — donated
+    w_out: jax.Array,     # (V, d) f32 — donated
+    tokens: jax.Array,    # (S, L) int32
+    negs: jax.Array,      # (S, L, N) int32
+    lengths: jax.Array,   # (S,) int32
+    lr: jax.Array,        # scalar f32
+    w_f: int,
+    backend: str = "auto",   # auto | pallas | pallas_interpret | jnp
+) -> Tuple[jax.Array, jax.Array]:
+    """Train one batch of sentences with FULL-W2V semantics."""
+    if backend == "auto":
+        backend = "pallas_pipelined" if _on_tpu() else "jnp"
+    if backend == "pallas":
+        return fullw2v_pallas(w_in, w_out, tokens, negs, lengths,
+                              jnp.asarray(lr, jnp.float32), w_f)
+    if backend == "pallas_pipelined":
+        # §3.1 prefetch: negative/target rows for window t+1 DMA while
+        # window t computes (hazard-safe; see kernels.fullw2v)
+        return fullw2v_pallas(w_in, w_out, tokens, negs, lengths,
+                              jnp.asarray(lr, jnp.float32), w_f,
+                              pipeline=True)
+    if backend == "pallas_interpret":
+        return fullw2v_pallas(w_in, w_out, tokens, negs, lengths,
+                              jnp.asarray(lr, jnp.float32), w_f,
+                              interpret=True)
+    if backend == "jnp":
+        return _ref.batch_sgns_ref(w_in, w_out, tokens, negs, lengths,
+                                   jnp.asarray(lr, jnp.float32), w_f)
+    raise ValueError(f"unknown backend {backend!r}")

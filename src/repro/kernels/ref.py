@@ -1,0 +1,124 @@
+"""Pure-jnp oracle for the FULL-W2V kernel.
+
+Implements exactly the schedule of `repro.core.window.schedule`:
+
+  preload positions 0..W_f-1
+  for t in 0..len-1:
+      q = t + W_f: store evicted position q - R (if any), load q
+      process window t (shared-negative GEMM update, pre-window values)
+  flush surviving positions in increasing order
+
+The Pallas kernel (`fullw2v.py`) must match this to float tolerance; the
+property tests additionally check this oracle against a direct
+no-ring-buffer recomputation (`repro.core.baselines.matrix_sgns`) on the
+quantities where they must agree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sgns import window_delta
+
+
+@functools.partial(jax.jit, static_argnames=("w_f",), donate_argnums=(0, 1))
+def sentence_sgns_ref(
+    w_in: jax.Array,      # (V, d) f32 input embeddings
+    w_out: jax.Array,     # (V, d) f32 output embeddings
+    tokens: jax.Array,    # (L,) int32, padded with anything beyond `length`
+    negs: jax.Array,      # (L, N) int32 pre-sampled negatives per window
+    length: jax.Array,    # scalar int32 — actual sentence length
+    lr: jax.Array,        # scalar f32
+    w_f: int,
+) -> Tuple[jax.Array, jax.Array]:
+    L, N = negs.shape
+    V, d = w_in.shape
+    r = 2 * w_f + 1
+    offsets = jnp.array([o for o in range(-w_f, w_f + 1) if o != 0],
+                        dtype=jnp.int32)                      # (K,)
+
+    buf = jnp.zeros((r, d), w_in.dtype)
+
+    # --- preload positions 0..w_f-1 ---
+    def preload(q, carry):
+        w_in, buf = carry
+        valid = q < length
+        tok = tokens[jnp.clip(q, 0, L - 1)]
+        row = jnp.where(valid, w_in[tok], buf[q % r])
+        buf = buf.at[q % r].set(row)
+        return (w_in, buf)
+
+    w_in, buf = jax.lax.fori_loop(0, min(w_f, L), preload, (w_in, buf))
+
+    def step(t, carry):
+        w_in, w_out, buf = carry
+        active = t < length
+
+        # --- evict + load leading edge q = t + w_f ---
+        q = t + w_f
+        do_load = active & (q < length)
+        old = q - r
+        do_store = do_load & (old >= 0)
+        old_c = jnp.clip(old, 0, L - 1)
+        store_idx = tokens[old_c]
+        store_val = jnp.where(do_store, buf[old_c % r], w_in[store_idx])
+        w_in = w_in.at[store_idx].set(store_val)
+
+        q_c = jnp.clip(q, 0, L - 1)
+        load_row = jnp.where(do_load, w_in[tokens[q_c]], buf[q_c % r])
+        buf = buf.at[q_c % r].set(load_row)
+
+        # --- window t ---
+        p = t + offsets                                       # (K,)
+        mask = active & (p >= 0) & (p < length)
+        slots = jnp.mod(p, r)
+        ctx = buf[slots]                                      # (K, d)
+        out_idx = jnp.concatenate([tokens[t][None], negs[t]]) # (N+1,)
+        out_rows = w_out[out_idx]
+        d_ctx, d_out = window_delta(ctx, out_rows, mask, lr)
+        buf = buf.at[slots].add(d_ctx)        # masked rows contribute zeros
+        w_out = w_out.at[out_idx].add(jnp.where(active, d_out, 0.0))
+        return (w_in, w_out, buf)
+
+    w_in, w_out, buf = jax.lax.fori_loop(0, L, step, (w_in, w_out, buf))
+
+    # --- flush surviving positions length-r .. length-1 (increasing) ---
+    def flush(k, carry):
+        w_in, buf = carry
+        p = length - r + k
+        valid = p >= 0
+        p_c = jnp.clip(p, 0, L - 1)
+        idx = tokens[p_c]
+        val = jnp.where(valid, buf[jnp.mod(p_c, r)], w_in[idx])
+        w_in = w_in.at[idx].set(val)
+        return (w_in, buf)
+
+    w_in, buf = jax.lax.fori_loop(0, r, flush, (w_in, buf))
+    return w_in, w_out
+
+
+@functools.partial(jax.jit, static_argnames=("w_f",), donate_argnums=(0, 1))
+def batch_sgns_ref(
+    w_in: jax.Array,      # (V, d)
+    w_out: jax.Array,     # (V, d)
+    tokens: jax.Array,    # (S, L)
+    negs: jax.Array,      # (S, L, N)
+    lengths: jax.Array,   # (S,)
+    lr: jax.Array,        # scalar
+    w_f: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (deterministic) pass over a batch of sentences — the same
+    order the Pallas grid uses."""
+
+    def body(carry, xs):
+        w_in, w_out = carry
+        toks, ngs, ln = xs
+        w_in, w_out = sentence_sgns_ref(w_in, w_out, toks, ngs, ln, lr, w_f)
+        return (w_in, w_out), None
+
+    (w_in, w_out), _ = jax.lax.scan(body, (w_in, w_out),
+                                    (tokens, negs, lengths))
+    return w_in, w_out

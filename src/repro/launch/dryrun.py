@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh, record memory/cost/collective analysis.
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`) — the
+512 fake host devices are locked in at jax init, which is why the XLA_FLAGS
+assignment above precedes every other import.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --multi-pod
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, cells, get_arch, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, model_flops_for
+from repro.launch.steps import build_cell
+
+
+def _compile(cfg, shape_name, mesh, param_dtype, microbatches,
+             zero_stage=3, rule_overrides=None):
+    import jax.numpy as jnp
+    jit, args, rules = build_cell(cfg, shape_name, mesh,
+                                  param_dtype=getattr(jnp, param_dtype),
+                                  microbatches=microbatches,
+                                  zero_stage=zero_stage,
+                                  rule_overrides=rule_overrides)
+    return jit.lower(*args).compile()
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             microbatches: int = 1, param_dtype: str = "bfloat16",
+             verbose: bool = True, cfg=None, zero_stage: int = 3,
+             rule_overrides=None, tag: str = "", extrap: bool = True) -> dict:
+    import dataclasses
+
+    cfg = cfg or get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.perf_counter()
+    compiled = _compile(cfg, shape_name, mesh, param_dtype, microbatches,
+                        zero_stage, rule_overrides)
+    t_compile = time.perf_counter() - t0
+
+    # --- loop-corrected cost extrapolation -------------------------------
+    # XLA cost_analysis counts while-loop (layer-scan) bodies ONCE — for
+    # both the forward and the remat'd backward scan, so even deltas over
+    # the scanned compile are wrong. The analysis compiles therefore use
+    # scan_layers=False (python-unrolled blocks; all intra-block loops are
+    # already statically unrolled — flash attention, SSD chunks,
+    # microbatches), at 2 and 3 blocks: cost(nb) = base + nb * per_block,
+    # which is exact for homogeneous stacks (calibrated against analytic
+    # matmul FLOPs — see EXPERIMENTS.md §Roofline).
+    pat_len = len(cfg.hybrid_pattern) if cfg.hybrid_pattern else 1
+    nb_full = cfg.n_layers // pat_len
+    if not extrap:
+        # compile-success + memory proof only (multi-pod runs: the roofline
+        # table is single-pod per the assignment)
+        from repro.launch.costmodel import memory_bytes
+        terms = analyze(compiled,
+                        model_flops=model_flops_for(cfg, shape) / n_dev)
+        mem_model = memory_bytes(cfg, shape, multi_pod)
+        mem = compiled.memory_analysis()
+        result = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_devices": n_dev, "status": "ok", "tag": tag or "baseline",
+            "extrapolated": False,
+            "compile_s": round(t_compile, 1),
+            "memory_analysis": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            },
+            "roofline": terms.as_dict(),
+        }
+        if verbose:
+            print(f"[{arch} × {shape_name} × {result['mesh']}] compile "
+                  f"{t_compile:.0f}s OK (no-extrap); memory:",
+                  result["memory_analysis"])
+        return result
+    t0 = time.perf_counter()
+    c2 = analyze(_compile(
+        dataclasses.replace(cfg, n_layers=2 * pat_len, scan_layers=False),
+        shape_name, mesh, param_dtype, microbatches, zero_stage,
+        rule_overrides))
+    c3 = analyze(_compile(
+        dataclasses.replace(cfg, n_layers=3 * pat_len, scan_layers=False),
+        shape_name, mesh, param_dtype, microbatches, zero_stage,
+        rule_overrides))
+    t_extrap = time.perf_counter() - t0
+
+    def extrap(f2, f3):
+        per_block = f3 - f2
+        base = f2 - 2 * per_block
+        return max(base + nb_full * per_block, 0.0)
+
+    from repro.launch.costmodel import memory_bytes
+
+    terms = analyze(compiled,
+                    model_flops=model_flops_for(cfg, shape) / n_dev)
+    raw = terms.as_dict()
+    terms.flops = extrap(c2.flops, c3.flops)
+    # memory term: analytic TPU-fusion-aware model (the CPU backend's HLO
+    # leaves elementwise chains unfused and overestimates HBM traffic
+    # 5-20x — EXPERIMENTS.md §Roofline caveats). HLO bytes kept in
+    # raw_hlo_costs for reference.
+    mem_model = memory_bytes(cfg, shape, multi_pod)
+    raw["hlo_bytes_extrapolated"] = extrap(c2.bytes_accessed,
+                                           c3.bytes_accessed)
+    terms.bytes_accessed = mem_model["total"]
+    terms.coll_bytes = extrap(c2.coll_bytes, c3.coll_bytes)
+    terms.coll_breakdown = {
+        k: extrap(c2.coll_breakdown.get(k, 0.0), c3.coll_breakdown.get(k, 0.0))
+        for k in set(c2.coll_breakdown) | set(c3.coll_breakdown)}
+    mem = compiled.memory_analysis()
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "status": "ok",
+        "tag": tag or "baseline",
+        "variant": {"zero_stage": zero_stage, "microbatches": microbatches,
+                    "remat_policy": cfg.remat_policy,
+                    "rule_overrides": repr(rule_overrides)},
+        "compile_s": round(t_compile, 1),
+        "extrap_compile_s": round(t_extrap, 1),
+        "raw_hlo_costs": {k: raw[k] for k in
+                          ("flops", "bytes_accessed", "coll_bytes",
+                           "hlo_bytes_extrapolated")},
+        "memory_model": mem_model,
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "roofline": terms.as_dict(),
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {result['mesh']}] "
+              f"compile {t_compile:.0f}s | "
+              f"t_comp {terms.t_compute*1e3:.2f}ms "
+              f"t_mem {terms.t_memory*1e3:.2f}ms "
+              f"t_coll {terms.t_collective*1e3:.2f}ms "
+              f"-> {terms.bottleneck}-bound, "
+              f"roofline_frac {terms.roofline_frac:.3f}")
+        print("  memory_analysis:", result["memory_analysis"])
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--param-dtype", default="bfloat16")
+    ap.add_argument("--no-extrap", action="store_true",
+                    help="compile + memory proof only (skip cost compiles)")
+    ap.add_argument("--zero-stage", type=int, default=3)
+    ap.add_argument("--remat-policy", default=None,
+                    choices=[None, "nothing", "dots"])
+    ap.add_argument("--repl-qo", action="store_true",
+                    help="replicate q/o projections over model "
+                         "(kills uneven-head reshard gathers)")
+    ap.add_argument("--bf16-reduce", action="store_true",
+                    help="bf16 partial sums on row-parallel projections "
+                         "(halves TP stream all-reduce wire bytes)")
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="map the whole mesh to ZeRO data parallelism "
+                         "(no TP) — for models too small for 16-way TP")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args()
+
+    todo = []
+    if args.all:
+        for arch, shape in cells():
+            todo.append((arch, shape, False))
+            if args.both_meshes:
+                todo.append((arch, shape, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        todo = [(args.arch, args.shape, mp) for mp in meshes]
+
+    failures = 0
+    overrides = {}
+    if args.repl_qo:
+        overrides["head_dim"] = (None,)
+    if args.pure_dp:
+        from repro.distributed.sharding import PURE_DP_OVERRIDES
+        overrides.update(PURE_DP_OVERRIDES)
+    overrides = overrides or None
+    for arch, shape, mp in todo:
+        try:
+            import dataclasses as _dc
+            cfg = get_arch(arch)
+            if args.remat_policy:
+                cfg = _dc.replace(cfg, remat_policy=args.remat_policy)
+            if args.bf16_reduce:
+                cfg = _dc.replace(cfg, bf16_reduce=True)
+            res = run_cell(arch, shape, mp, args.microbatches,
+                           args.param_dtype, cfg=cfg,
+                           zero_stage=args.zero_stage,
+                           rule_overrides=overrides, tag=args.tag,
+                           extrap=not args.no_extrap)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            traceback.print_exc()
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": repr(e)}
+            failures += 1
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(res) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,188 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step per chip:
+
+  compute    = HLO_FLOPs / peak_FLOPs            (cost_analysis, per device)
+  memory     = HLO_bytes / HBM_bw                (cost_analysis bytes accessed)
+  collective = Σ collective_bytes / ICI_link_bw  (parsed from partitioned HLO)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(single-link conservative estimate; see EXPERIMENTS.md §Roofline caveats).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (one link assumed)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# result of `op(...)`: e.g.  %ag = bf16[2,4096]{1,0} all-gather(%x), ...
+# (tuple results e.g. all-to-all can list several shapes — captured greedily)
+_COLLECTIVE_RE = re.compile(
+    r"=\s*\(?((?:[a-z0-9]+\[[0-9,]*\][^ )]*(?:,\s*)?)+)\)?\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shapes: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))    # [num_groups, group_size]
+    return 2
+
+
+def _wire_factor(op: str, n: int) -> float:
+    """Per-device wire bytes as a multiple of the RESULT size (ring algos)."""
+    n = max(n, 2)
+    if op == "all-gather":
+        return (n - 1) / n          # result = gathered (full) tensor
+    if op == "all-reduce":
+        return 2 * (n - 1) / n      # reduce-scatter + all-gather of result
+    if op == "reduce-scatter":
+        return float(n - 1)         # result = 1/n of the operand
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0                      # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-op-kind wire bytes from a partitioned (per-device) HLO dump."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shapes, op = m.group(1), m.group(2)
+        b = _shape_bytes(shapes) * _wire_factor(op, _group_size(line))
+        out[op] = out.get(op, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float               # per-device FLOPs per step
+    bytes_accessed: float      # per-device HBM bytes per step
+    coll_bytes: float          # per-device collective wire bytes per step
+    coll_breakdown: Dict[str, float]
+    peak_memory_bytes: Optional[float] = None
+    model_flops: Optional[float] = None     # 6·N·D (train) or 2·N·D (serve)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time if the three units fully overlap."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> Optional[float]:
+        if self.model_flops is None or self.flops == 0:
+            return None
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the binding roof actually spent on model FLOPs
+        (the score: model-useful compute / bound time)."""
+        mf = self.model_flops if self.model_flops else self.flops
+        t = self.t_bound
+        return (mf / PEAK_FLOPS) / t if t else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def analyze(compiled, model_flops: Optional[float] = None) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = compiled.memory_analysis()
+    peak = None
+    if mem is not None:
+        peak = (getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0))
+    return RooflineTerms(
+        flops=flops,
+        bytes_accessed=nbytes,
+        coll_bytes=coll.get("total", 0.0),
+        coll_breakdown=coll,
+        peak_memory_bytes=peak,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS per device per step: 6·N_active·tokens (train),
+    2·N_active·tokens (forward/serve), over all devices -> divided later."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,208 @@
+"""Jittable train/serve steps + abstract input specs for every
+(architecture × input shape) cell.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs (no allocation);
+``make_train_step``/``make_serve_step`` build the functions the dry-run
+lowers and the launcher executes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, InputShape
+from repro.distributed.sharding import Rules, axis_rules, param_shardings
+from repro.models import lm
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                param_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the step function."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.prefix_len:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.prefix_len, cfg.d_model), param_dtype)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.prefix_len:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.prefix_len, cfg.d_model), param_dtype)
+    elif shape.kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        specs["cache"] = lm.init_cache(cfg, b, s, jnp.bfloat16)
+        specs["cache_len"] = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        raise ValueError(shape.kind)
+    return specs
+
+
+def batch_shardings(cfg: ArchConfig, shape: InputShape, rules: Rules):
+    """Shardings matching input_specs."""
+    specs = input_specs(cfg, shape)
+    out: Dict[str, Any] = {}
+    for name, sd in specs.items():
+        if name == "cache":
+            out[name] = lm.cache_shardings(cfg, rules, shape.global_batch,
+                                           shape.seq_len)
+        elif name == "cache_len":
+            out[name] = NamedSharding(rules.mesh, P())
+        elif name == "prefix_embeds":
+            out[name] = rules.sharding(("batch", None, None), sd.shape)
+        else:
+            out[name] = rules.sharding(("batch", None), sd.shape)
+    return out
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, opt: AdamWConfig,
+                    microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        prefix = batch.get("prefix_embeds")
+
+        def loss_fn(p, toks, labs, pref):
+            return lm.lm_loss(cfg, p, toks, labs, pref)
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens,
+                                                      labels, prefix)
+        else:
+            b = tokens.shape[0]
+            assert b % microbatches == 0
+
+            # python-unrolled accumulation (static trip count keeps
+            # cost_analysis exact; XLA still schedules sequentially)
+            mb_sz = b // microbatches
+            grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            loss = jnp.float32(0.0)
+            for i in range(microbatches):
+                sl = lambda x: x[i * mb_sz:(i + 1) * mb_sz]
+                l, g = jax.value_and_grad(loss_fn)(
+                    params, sl(tokens), sl(labels),
+                    None if prefix is None else sl(prefix))
+                grads = jax.tree.map(jnp.add, grads, g)
+                loss = loss + l
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+
+        params, opt_state = adamw_update(opt, params, grads, opt_state)
+        metrics = {"loss": loss, "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits, cache, clen = lm.prefill(cfg, params, batch["tokens"],
+                                         batch.get("prefix_embeds"))
+        return {"logits": logits, "cache": cache, "cache_len": clen}
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One-token decode against a seq_len KV/state cache."""
+
+    def serve_step(params, batch):
+        logits, cache = lm.decode_step(cfg, params, batch["cache"],
+                                       batch["cache_len"], batch["tokens"])
+        return {"logits": logits, "cache": cache}
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# jit assembly for a (cfg, shape, mesh) cell
+# --------------------------------------------------------------------------
+def build_cell(cfg: ArchConfig, shape_name: str, mesh: Mesh,
+               opt: Optional[AdamWConfig] = None,
+               param_dtype=jnp.bfloat16, microbatches: int = 1,
+               zero_stage: int = 3, rule_overrides: Optional[Dict] = None):
+    """Returns (jitted fn, example abstract args, rules) for lowering.
+
+    Perf knobs (see EXPERIMENTS.md §Perf):
+      zero_stage=3 — params FSDP-sharded over data (per-layer gathers);
+      zero_stage=2 — params data-replicated, optimizer state still sharded
+                     (one param all-gather per STEP instead of per layer —
+                     wins when the TP-sharded copy fits HBM).
+      rule_overrides — logical-axis table overrides (e.g. {"head_dim":
+                     (None,)} to stop q/o reshard gathers on uneven-head
+                     archs at the cost of replicated projections).
+    """
+    shape = SHAPES[shape_name]
+    overrides = dict(rule_overrides or {})
+    if zero_stage == 2:
+        overrides["fsdp"] = (None,)
+    rules = Rules(mesh, overrides or None)
+    opt_rules = Rules(mesh, rule_overrides or None)  # opt state stays sharded
+    if shape.kind != "train":
+        # Serving: FSDP param-gathering per token is a latency disaster;
+        # replicate params over `data` whenever the TP-sharded copy fits
+        # HBM (<= ~12GB/chip), else keep ZeRO-3 sharding (arctic, jamba).
+        model_par = mesh.shape.get("model", 1)
+        if cfg.param_count() * 2 / model_par <= 12e9:
+            rules = Rules(mesh, overrides={"fsdp": (None,)})
+    p_abs = lm.abstract_params(cfg, param_dtype)
+    p_shard = param_shardings(p_abs, rules)
+    b_specs = input_specs(cfg, shape, param_dtype)
+    b_shard = batch_shardings(cfg, shape, rules)
+
+    def with_rules(fn):
+        # `constrain` resolves logical axes at trace time — activate the
+        # exact Rules used for param shardings whenever the step is traced.
+        from repro.distributed.sharding import activate_rules
+
+        @functools.wraps(fn)
+        def wrapper(*a):
+            with activate_rules(rules):
+                return fn(*a)
+        return wrapper
+
+    if shape.kind == "train":
+        opt = opt or AdamWConfig()
+        step = with_rules(make_train_step(cfg, opt, microbatches))
+        o_abs = jax.eval_shape(adamw_init, p_abs)
+        from repro.train.optim import AdamWState
+        opt_leaf_shard = param_shardings(p_abs, opt_rules, role="opt")
+        o_shard = AdamWState(step=NamedSharding(mesh, P()),
+                             m=opt_leaf_shard, v=opt_leaf_shard)
+        jit = jax.jit(step,
+                      in_shardings=(p_shard, o_shard, b_shard),
+                      out_shardings=(p_shard, o_shard, None),
+                      donate_argnums=(0, 1))
+        args = (p_abs, o_abs, b_specs)
+    elif shape.kind == "prefill":
+        step = with_rules(make_prefill_step(cfg))
+        jit = jax.jit(step, in_shardings=(p_shard, b_shard),
+                      out_shardings=None)
+        args = (p_abs, b_specs)
+    else:
+        step = with_rules(make_serve_step(cfg))
+        out_shard = {"logits": rules.sharding(("batch", "vocab"),
+                                              (shape.global_batch, cfg.vocab)),
+                     "cache": lm.cache_shardings(cfg, rules,
+                                                 shape.global_batch,
+                                                 shape.seq_len)}
+        jit = jax.jit(step, in_shardings=(p_shard, b_shard),
+                      out_shardings=out_shard,
+                      donate_argnums=(1,))
+        args = (p_abs, b_specs)
+    return jit, args, rules

@@ -1,0 +1,113 @@
+"""End-to-end launcher.
+
+Two paths, per the paper's kind:
+  * `w2v`  — the paper's workload: FULL-W2V embedding training (default).
+  * `lm`   — any assigned architecture (reduced or full), synthetic tokens.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train w2v --vocab 400000 --epochs 2
+  PYTHONPATH=src python -m repro.launch.train lm --arch qwen3-8b --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import sys
+
+import jax
+import numpy as np
+
+
+def run_w2v(args) -> int:
+    from repro.configs.w2v import W2VConfig
+    from repro.core.quality import evaluate
+    from repro.core.trainer import W2VTrainer
+    from repro.data.batching import BatchingPipeline
+    from repro.data.corpus import synthetic_cluster_corpus
+
+    cfg = W2VConfig(dim=args.dim, epochs=args.epochs, min_count=1,
+                    subsample_t=0.0, negatives=args.negatives,
+                    window=args.window,
+                    sentences_per_batch=args.sentences_per_batch,
+                    max_sentence_len=args.max_sentence_len)
+    words_per_cluster = max(args.vocab // args.clusters, 1)
+    corpus = synthetic_cluster_corpus(
+        n_clusters=args.clusters, words_per_cluster=words_per_cluster,
+        n_sentences=args.sentences, mean_len=24, seed=0)
+    pipe = BatchingPipeline(corpus, cfg)
+    print(f"vocab={pipe.vocab.size} params="
+          f"{2 * pipe.vocab.size * cfg.dim / 1e6:.1f}M words/epoch="
+          f"{pipe.epoch_words}")
+    trainer = W2VTrainer(pipe, cfg, backend=args.backend)
+    trainer.train(max_batches=args.max_batches)
+    print(f"throughput: {trainer.words_per_sec:,.0f} words/sec "
+          f"({trainer.state.words_seen:,} words)")
+    inv = np.zeros(pipe.vocab.size, dtype=int)
+    for w, i in pipe.vocab.ids.items():
+        inv[i] = corpus.clusters[w]
+    metrics = evaluate(trainer.embeddings(), inv)
+    print("quality:", {k: round(v, 4) for k, v in metrics.items()})
+    return 0
+
+
+def run_lm(args) -> int:
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_arch, get_smoke
+    from repro.train.loop import LoopConfig, Trainer
+    from repro.train.optim import AdamWConfig
+
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    loop = LoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every,
+                      microbatches=args.microbatches)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 1))
+    trainer = Trainer(cfg, opt, loop, batch=args.batch, seq=args.seq)
+    out = trainer.train()
+    losses = out["losses"]
+    print(f"final step {out['final_step']}; loss {losses[0]:.4f} -> "
+          f"{losses[-1]:.4f}")
+    return 0
+
+
+def main() -> int:
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    w = sub.add_parser("w2v")
+    w.add_argument("--vocab", type=int, default=8192)
+    w.add_argument("--clusters", type=int, default=64)
+    w.add_argument("--sentences", type=int, default=20000)
+    w.add_argument("--dim", type=int, default=128)
+    w.add_argument("--window", type=int, default=5)
+    w.add_argument("--negatives", type=int, default=5)
+    w.add_argument("--epochs", type=int, default=2)
+    w.add_argument("--sentences-per-batch", type=int, default=2048)
+    w.add_argument("--max-sentence-len", type=int, default=64)
+    w.add_argument("--max-batches", type=int, default=None)
+    w.add_argument("--backend", default="jnp",
+                   choices=["auto", "jnp", "pallas", "pallas_interpret"])
+    w.set_defaults(fn=run_w2v)
+
+    l = sub.add_parser("lm")
+    l.add_argument("--arch", required=True)
+    l.add_argument("--smoke", action="store_true")
+    l.add_argument("--steps", type=int, default=100)
+    l.add_argument("--batch", type=int, default=8)
+    l.add_argument("--seq", type=int, default=128)
+    l.add_argument("--lr", type=float, default=3e-4)
+    l.add_argument("--microbatches", type=int, default=1)
+    l.add_argument("--ckpt-dir", default=None)
+    l.add_argument("--ckpt-every", type=int, default=50)
+    l.set_defaults(fn=run_lm)
+
+    args = ap.parse_args()
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+from repro.models.lm import (
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    prefill,
+    zero_cache,
+)
+
+__all__ = [
+    "abstract_params", "decode_step", "forward", "init_cache",
+    "init_params", "lm_loss", "prefill", "zero_cache",
+]

@@ -1,0 +1,225 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention, SwiGLU.
+
+Attention is computed in query chunks (lax.scan over blocks of queries) so
+32k-context prefill never materializes the full S×S score matrix — the
+VMEM/HBM-friendly formulation for TPU (flash-style blocking at the XLA
+level; a Pallas flash kernel is an optional further step, see EXPERIMENTS.md
+§Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, jax.Array]
+
+ATTN_Q_CHUNK = 1024  # query block size for chunked causal attention
+
+
+# --------------------------------------------------------------------------
+# norms / rotary
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, causal, query-chunked)
+# --------------------------------------------------------------------------
+def init_attention(cfg: ArchConfig, key: jax.Array,
+                   dtype=jnp.float32) -> Params:
+    d, nh, nkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, nh, hd), dtype) * s,
+        "wk": jax.random.normal(k2, (d, nkv, hd), dtype) * s,
+        "wv": jax.random.normal(k3, (d, nkv, hd), dtype) * s,
+        "wo": jax.random.normal(k4, (nh, hd, d), dtype) * (nh * hd) ** -0.5,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(cfg: ArchConfig, p: Params, x: jax.Array,
+         positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    from repro.distributed.sharding import constrain
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped(q: jax.Array, nkv: int) -> jax.Array:
+    """(B,S,nh,hd) -> (B,S,nkv,group,hd)."""
+    b, s, nh, hd = q.shape
+    return q.reshape(b, s, nkv, nh // nkv, hd)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     n_q_chunks: int = 16, n_kv_chunks: int = 8) -> jax.Array:
+    """Flash-style causal attention, statically unrolled, head-sharded.
+
+    Online-softmax over kv chunks inside a python loop over q chunks: the
+    full S×S probability matrix is never materialized (per-body transient is
+    qc×kc), causally-dead kv chunks are skipped at trace time, and — because
+    there are no inner lax loops — XLA cost_analysis counts every FLOP
+    (see launch/roofline.py loop-correction notes).
+
+    GQA is flattened: k/v are repeated to the full head count so that ALL
+    attention tensors shard on the head dim over the `model` axis (GSPMD
+    pads uneven head counts, e.g. 24 heads / 16 devices). Matmuls run in
+    bf16 with f32 accumulation; softmax state (m, l, acc) is f32.
+
+    q: (B,Sq,nh,hd), k/v: (B,Sk,nkv,hd); self-attention (q_offset = 0).
+    """
+    from repro.distributed.sharding import constrain
+    b, sq, nh, hd = q.shape
+    sk = k.shape[1]
+    nkv = k.shape[2]
+    scale = hd ** -0.5
+    # repeat KV to full heads; every device materializes only its head shard
+    k = constrain(jnp.repeat(k, nh // nkv, axis=2),
+                  "batch", "seq", "heads", None)
+    v = constrain(jnp.repeat(v, nh // nkv, axis=2),
+                  "batch", "seq", "heads", None)
+    qc = max(1, _ceil_div(sq, n_q_chunks))
+    kc = max(1, _ceil_div(sk, n_kv_chunks))
+
+    out_chunks = []
+    for qi in range(_ceil_div(sq, qc)):
+        q0, q1 = qi * qc, min((qi + 1) * qc, sq)
+        q_blk = q[:, q0:q1]
+        qlen = q1 - q0
+        m = jnp.full((b, qlen, nh), -jnp.inf, jnp.float32)
+        l = jnp.zeros((b, qlen, nh), jnp.float32)
+        acc = jnp.zeros((b, qlen, nh, hd), jnp.float32)
+        for ki in range(_ceil_div(min(q1, sk), kc)):
+            k0, k1 = ki * kc, min((ki + 1) * kc, sk)
+            k_blk = k[:, k0:k1]
+            v_blk = v[:, k0:k1]
+            logits = jax.lax.dot_general(
+                q_blk, k_blk,
+                (((3,), (3,)), ((0, 2), (0, 2))),
+                preferred_element_type=jnp.float32)          # (B,nh,qc,kc)
+            logits = jnp.moveaxis(logits, 1, 2) * scale      # (B,qc,nh,kc)
+            if k1 > q0:                          # chunk touches the diagonal
+                qpos = q0 + jnp.arange(qlen)
+                kpos = k0 + jnp.arange(k1 - k0)
+                mask = kpos[None, :] <= qpos[:, None]
+                logits = jnp.where(mask[:, None, :][None], logits, -jnp.inf)
+            m_new = jnp.maximum(m, logits.max(-1))
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(logits - safe_m[..., None])
+            p = jnp.where(jnp.isfinite(logits), p, 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+            l = l * alpha + p.sum(-1)
+            pv = jax.lax.dot_general(
+                p.astype(v_blk.dtype), v_blk,
+                (((3,), (1,)), ((0, 2), (0, 2))),
+                preferred_element_type=jnp.float32)          # (B,nh,qc,hd)
+            acc = acc * alpha[..., None] + jnp.moveaxis(pv, 1, 2)
+            m = m_new
+        out_chunks.append(acc / jnp.maximum(l[..., None], 1e-30))
+    out = jnp.concatenate(out_chunks, axis=1)
+    return constrain(out.astype(q.dtype), "batch", "seq", "heads", None)
+
+
+def attention_block(cfg: ArchConfig, p: Params, x: jax.Array,
+                    positions: jax.Array, return_kv: bool = False):
+    q, k, v = _qkv(cfg, p, x, positions)
+    o = causal_attention(q, k, v)
+    b, s, nh, hd = o.shape
+    out = rp_dot(o.reshape(b, s, nh * hd),
+                 p["wo"].reshape(nh * hd, -1), cfg.bf16_reduce)
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def attention_decode(cfg: ArchConfig, p: Params, x: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode. x: (B,1,d); caches: (B,S,nkv,hd)."""
+    b, _, d = x.shape
+    s_max = k_cache.shape[1]
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    q, k, v = _qkv(cfg, p, x, pos)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), cache_len, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), cache_len, 1)
+    nkv = k_cache.shape[2]
+    qg = _grouped(q, nkv)                                     # (B,1,nkv,g,hd)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqkgh,bskh->bqkgs", qg, k_cache) * scale
+    valid = jnp.arange(s_max) <= cache_len                    # (S,)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(v_cache.dtype)
+    o = jnp.einsum("bqkgs,bskh->bqkgh", w, v_cache)
+    o = o.reshape(b, 1, cfg.n_heads, q.shape[-1])
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+def init_mlp(d: int, ff: int, key: jax.Array, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(k1, (d, ff), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(k2, (d, ff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(k3, (ff, d), dtype) * ff ** -0.5,
+    }
+
+
+def rp_dot(a: jax.Array, b: jax.Array, bf16_out: bool) -> jax.Array:
+    """Row-parallel projection (contraction dim TP-sharded -> psum after).
+    bf16_out makes the partial sums (and hence the TP all-reduce) bf16."""
+    out = jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.bfloat16 if bf16_out else None)
+    return out
+
+
+def mlp_block(p: Params, x: jax.Array, bf16_reduce: bool = False) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return rp_dot(h, p["w_down"], bf16_reduce)

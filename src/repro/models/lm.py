@@ -1,0 +1,368 @@
+"""Decoder LM assembly: scan-over-blocks forward, prefill, and decode.
+
+Layers are stacked along a leading ``n_blocks`` dim and consumed by
+``lax.scan`` (compile time O(1) in depth — essential for 95-layer configs on
+the 512-device dry-run). Hybrid archs (Jamba) scan over repeating
+``len(pattern)``-layer blocks with per-position parameter stacks.
+
+``[audio]``/``[vlm]`` archs prepend precomputed ``prefix_embeds`` (the
+modality-frontend stub per the assignment) to the token embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    attention_block,
+    attention_decode,
+    init_attention,
+    init_mlp,
+    mlp_block,
+    rms_norm,
+)
+
+Params = Dict
+
+
+def block_pattern(cfg: ArchConfig) -> Tuple[str, ...]:
+    kinds = cfg.layer_kinds()
+    pat = cfg.hybrid_pattern or (kinds[0],)
+    return tuple(pat)
+
+
+def n_blocks(cfg: ArchConfig) -> int:
+    return cfg.n_layers // len(block_pattern(cfg))
+
+
+def _uses_moe(cfg: ArchConfig, pos: int) -> bool:
+    return cfg.moe is not None and cfg.d_ff > 0 and pos % cfg.moe_every == 0
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _init_layer(cfg: ArchConfig, kind: str, pos: int, key: jax.Array,
+                dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: Params = {"pre_norm": jnp.ones((d,), dtype)}
+    if kind == "attn":
+        p["mixer"] = init_attention(cfg, k1, dtype)
+    else:
+        p["mixer"] = ssm_mod.init_mamba(cfg, k1, dtype)
+    if cfg.d_ff > 0:
+        p["post_norm"] = jnp.ones((d,), dtype)
+        if _uses_moe(cfg, pos):
+            p["ffn"] = moe_mod.init_moe(cfg, k2, dtype)
+        else:
+            p["ffn"] = init_mlp(d, cfg.d_ff, k2, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32) -> Params:
+    pat = block_pattern(cfg)
+    nb = n_blocks(cfg)
+    keys = jax.random.split(key, len(pat) + 2)
+    blocks = []
+    for pos, kind in enumerate(pat):
+        layer_keys = jax.random.split(keys[pos], nb)
+        stacked = jax.vmap(
+            lambda k, _kind=kind, _pos=pos: _init_layer(cfg, _kind, _pos, k,
+                                                        dtype)
+        )(layer_keys)
+        blocks.append(stacked)
+    params: Params = {
+        "embed": jax.random.normal(keys[-2], (cfg.vocab, cfg.d_model),
+                                   dtype) * cfg.d_model ** -0.5,
+        "blocks": tuple(blocks),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(
+            keys[-1], (cfg.d_model, cfg.vocab), dtype) * cfg.d_model ** -0.5
+    return params
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree — dry-run params without allocation."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+
+def _scan_blocks(cfg: ArchConfig, body, carry, blocks_xs):
+    """lax.scan over layer blocks, or a python-unrolled equivalent when
+    cfg.scan_layers is False (exact XLA cost_analysis — see
+    launch/roofline.py). body: (carry, xs_slice) -> (carry, ys_slice)."""
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, blocks_xs)
+    nb = jax.tree.leaves(blocks_xs)[0].shape[0]
+    ys = []
+    for i in range(nb):
+        xs = jax.tree.map(lambda x: x[i], blocks_xs)
+        carry, y = body(carry, xs)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, stacked
+
+
+# --------------------------------------------------------------------------
+# forward (train / scoring)
+# --------------------------------------------------------------------------
+def _apply_layer(cfg: ArchConfig, kind: str, pos: int, p: Params,
+                 h: jax.Array, positions: jax.Array) -> jax.Array:
+    x = rms_norm(h, p["pre_norm"], cfg.norm_eps)
+    if kind == "attn":
+        mix = attention_block(cfg, p["mixer"], x, positions)
+    else:
+        mix = ssm_mod.mamba_block(cfg, p["mixer"], x)
+    h = h + mix
+    if cfg.d_ff > 0:
+        x = rms_norm(h, p["post_norm"], cfg.norm_eps)
+        if _uses_moe(cfg, pos):
+            h = h + moe_mod.moe_block(cfg, p["ffn"], x)
+        else:
+            h = h + mlp_block(p["ffn"], x, cfg.bf16_reduce)
+    return constrain(h, "batch", "seq", "embed")
+
+
+def embed_lookup(cfg: ArchConfig, embed: jax.Array,
+                 tokens: jax.Array) -> jax.Array:
+    """Embedding lookup against a REPLICATED table.
+
+    A vocab-sharded table makes jnp.take's backward a scatter-add that
+    GSPMD rewrites into UNSHARDED full-vocab (B,S,V) f32 one-hot
+    contractions (measured: 38GB/step of gathers — EXPERIMENTS.md §Perf),
+    and an explicit sharded one-hot einsum costs T·V·d FLOPs (~1000× a
+    gather). So the input table is replicated (ZeRO: its optimizer state
+    stays sharded — see `param_shardings(role="opt")`), the gather is
+    local, and the gradient is a single all-reduce per step.
+    """
+    return constrain(jnp.take(embed, tokens, axis=0),
+                     "batch", "seq", "embed")
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """tokens (B, S) -> logits (B, S_total, V)."""
+    pat = block_pattern(cfg)
+    h = embed_lookup(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    h = constrain(h, "batch", "seq", "embed")
+    b, s_total, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s_total)[None], (b, s_total))
+
+    def body(carry, xs):
+        hh = carry
+        for pos, kind in enumerate(pat):
+            hh = _apply_layer(cfg, kind, pos, xs[pos], hh, positions)
+        return hh, None
+
+    h, _ = _scan_blocks(cfg, body, h, params["blocks"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = h @ unembed
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def lm_loss(cfg: ArchConfig, params: Params, tokens: jax.Array,
+            labels: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """Next-token cross entropy over the token region (prefix excluded).
+
+    Shard-safe: the vocab dim stays sharded throughout — the max/sum
+    reductions become small cross-`model` collectives and the gold logit is
+    extracted with a fused select+reduce instead of take_along_axis (which
+    would force an all-gather of the full logits)."""
+    logits = forward(cfg, params, tokens, prefix_embeds)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:]
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - m).astype(jnp.float32)
+    shifted = constrain(shifted, "batch", "seq", "vocab")
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    vocab_iota = jnp.arange(cfg.vocab)[None, None, :]
+    gold_shifted = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], shifted, 0.0), axis=-1)
+    return jnp.mean(logz - gold_shifted)
+
+
+# --------------------------------------------------------------------------
+# KV / state caches, prefill, decode
+# --------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Abstract-shape factory; also usable to allocate zeros via tree_map."""
+    pat = block_pattern(cfg)
+    nb = n_blocks(cfg)
+    hd = cfg.resolved_head_dim()
+    s = cfg.ssm
+    cache = []
+    for kind in pat:
+        if kind == "attn":
+            kv = jax.ShapeDtypeStruct(
+                (nb, batch, max_len, cfg.n_kv_heads, hd), dtype)
+            cache.append({"k": kv, "v": kv})
+        else:
+            conv_ch = s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state
+            cache.append({
+                "conv": jax.ShapeDtypeStruct(
+                    (nb, batch, s.d_conv - 1, conv_ch), dtype),
+                "ssm": jax.ShapeDtypeStruct(
+                    (nb, batch, s.n_heads(cfg.d_model), s.head_dim,
+                     s.d_state), jnp.float32),
+            })
+    return tuple(cache)
+
+
+def zero_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        init_cache(cfg, batch, max_len, dtype))
+
+
+def cache_shardings(cfg: ArchConfig, rules, batch: int, max_len: int):
+    """NamedShardings for the decode cache.
+
+    Attention KV: batch over the data axes; the sequence dim additionally
+    shards over `model` when the KV heads can't (GQA kv < 16 — most archs),
+    and over `data` when the batch itself is unshardable (long-context
+    batch=1 → sequence parallelism)."""
+
+    def leaf(sd):
+        if sd.ndim == 5 and sd.shape[2] == max_len:   # (nb,B,S,kv,hd) KV
+            nb_, b, s_len, kv, hd = sd.shape
+            batch_ok = b % rules._axes_size(
+                rules._present(("pod", "data"))) == 0
+            kv_ok = kv % rules._axes_size(rules._present("model")) == 0
+            if batch_ok and kv_ok:
+                axes = ("stack", "batch", None, "kv_heads", None)
+            elif batch_ok:
+                axes = ("stack", "batch", "kv_seq_model", "kv_heads", None)
+            else:
+                axes = ("stack", None, "kv_seq", "kv_heads", None)
+            return rules.sharding(axes, sd.shape)
+        if sd.ndim == 4:        # (nb, B, W, conv_ch) conv cache
+            return rules.sharding(("stack", "batch", None, "inner"),
+                                  sd.shape)
+        return rules.sharding(("stack", "batch", "ssm_heads", None, None),
+                              sd.shape)
+
+    return jax.tree.map(leaf, init_cache(cfg, batch, max_len))
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            cache_dtype=jnp.bfloat16):
+    """Full-context forward that also builds the decode cache.
+
+    Returns (last-token logits (B, V), cache, cache_len).
+    """
+    pat = block_pattern(cfg)
+    h = embed_lookup(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    h = constrain(h, "batch", "seq", "embed")
+    b, s_total, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s_total)[None], (b, s_total))
+
+    def body(carry, xs):
+        hh = carry
+        out_cache = []
+        for pos, kind in enumerate(pat):
+            p = xs[pos]
+            x = rms_norm(hh, p["pre_norm"], cfg.norm_eps)
+            if kind == "attn":
+                mix, k, v = attention_block(cfg, p["mixer"], x, positions,
+                                            return_kv=True)
+                out_cache.append({"k": k.astype(cache_dtype),
+                                  "v": v.astype(cache_dtype)})
+            else:
+                mix, (conv_tail, state) = ssm_mod.mamba_block(
+                    cfg, p["mixer"], x, return_cache=True)
+                out_cache.append({"conv": conv_tail.astype(cache_dtype),
+                                  "ssm": state})
+            hh = hh + mix
+            if cfg.d_ff > 0:
+                x = rms_norm(hh, p["post_norm"], cfg.norm_eps)
+                if _uses_moe(cfg, pos):
+                    hh = hh + moe_mod.moe_block(cfg, p["ffn"], x)
+                else:
+                    hh = hh + mlp_block(p["ffn"], x, cfg.bf16_reduce)
+            hh = constrain(hh, "batch", "seq", "embed")
+        return hh, tuple(out_cache)
+
+    h, cache = _scan_blocks(cfg, body, h, params["blocks"])
+    h = rms_norm(h[:, -1], params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = h @ unembed
+    return logits, cache, jnp.int32(s_total)
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache, cache_len: jax.Array,
+                tokens: jax.Array):
+    """One-token decode. tokens (B, 1) -> (logits (B, V), new cache)."""
+    pat = block_pattern(cfg)
+    h = embed_lookup(cfg, params["embed"], tokens)      # (B, 1, d)
+    h = constrain(h, "batch", "seq", "embed")
+
+    def body(carry, xs):
+        hh = carry
+        bp, cb = xs
+        new_cb = []
+        for pos, kind in enumerate(pat):
+            p = bp[pos]
+            c = cb[pos]
+            x = rms_norm(hh, p["pre_norm"], cfg.norm_eps)
+            if kind == "attn":
+                mix, k_c, v_c = attention_decode(cfg, p["mixer"], x,
+                                                 c["k"], c["v"], cache_len)
+                new_cb.append({"k": k_c, "v": v_c})
+            else:
+                mix, conv_c, ssm_c = ssm_mod.mamba_decode(
+                    cfg, p["mixer"], x, c["conv"], c["ssm"])
+                new_cb.append({"conv": conv_c, "ssm": ssm_c})
+            hh = hh + mix
+            if cfg.d_ff > 0:
+                x = rms_norm(hh, p["post_norm"], cfg.norm_eps)
+                if _uses_moe(cfg, pos):
+                    hh = hh + moe_mod.moe_block(cfg, p["ffn"], x)
+                else:
+                    hh = hh + mlp_block(p["ffn"], x, cfg.bf16_reduce)
+        return hh, tuple(new_cb)
+
+    if cfg.scan_layers:
+        h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache))
+    else:
+        nb_ = n_blocks(cfg)
+        outs = []
+        for i in range(nb_):
+            xs = jax.tree.map(lambda x: x[i], (params["blocks"], cache))
+            h, y = body(h, xs)
+            outs.append(y)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+    h = rms_norm(h[:, 0], params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = h @ unembed
+    return logits, new_cache

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked dual form + decode step.
+
+Train/prefill uses the SSD block decomposition (arXiv:2405.21060): the
+sequence is split into chunks; within a chunk the quadratic "attention-like"
+dual form runs on the MXU, between chunks a small recurrent state (H, hd, S)
+is carried by a scan. Decode is the O(1) recurrent update.
+
+The canonical packed in_proj/conv are split into per-stream parameters
+(z, x, B, C, dt — mathematically identical for depthwise conv) so each
+piece shards cleanly over the mesh without halo collectives.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.layers import rms_norm
+
+Params = Dict[str, jax.Array]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def init_mamba(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32) -> Params:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gs = s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    sc = d ** -0.5
+    return {
+        "w_z": jax.random.normal(ks[0], (d, di), dtype) * sc,
+        "w_x": jax.random.normal(ks[1], (d, di), dtype) * sc,
+        "w_bc": jax.random.normal(ks[2], (d, 2 * gs), dtype) * sc,
+        "w_dt": jax.random.normal(ks[3], (d, nh), dtype) * sc,
+        "conv_x": jax.random.normal(ks[4], (s.d_conv, di), dtype) * 0.1,
+        "conv_bc": jax.random.normal(ks[5], (s.d_conv, 2 * gs), dtype) * 0.1,
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_b": jnp.zeros((2 * gs,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "w_out": jax.random.normal(ks[6], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, L, C) with kernel (W, C)."""
+    wlen = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(wlen):
+        out = out + pad[:, j:j + x.shape[1], :] * w[j]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array,
+                bmat: jax.Array, cmat: jax.Array, chunk: int,
+                state0: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD over (B, L, H, P) with chunk-wise dual form.
+
+    x (B,L,H,P); dt (B,L,H) post-softplus; a (H,) negative;
+    bmat/cmat (B,L,G,S) with G groups broadcast over H.
+    Returns (y (B,L,H,P), final state (B,H,P,S)).
+    """
+    bsz, l, h, p = x.shape
+    g, s = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    assert l % chunk == 0, (l, chunk)
+    n = l // chunk
+
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, p, s), jnp.float32)
+
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+
+    def chunk_step(state, inp):
+        # python-unrolled (no lax.scan): keeps XLA cost_analysis exact and
+        # lets the chunk count stay small via the adaptive chunk size
+        xk, dtk, bk, ck = inp                 # (B,c,H,P),(B,c,H),(B,c,G,S)
+        dta = dtk * a                          # (B,c,H)
+        cum = jnp.cumsum(dta, axis=1)          # (B,c,H)
+        bh = jnp.repeat(bk, rep, axis=2)       # (B,c,H,S)
+        ch = jnp.repeat(ck, rep, axis=2)       # (B,c,H,S)
+
+        # ---- intra-chunk (dual quadratic form) ----
+        scores = jnp.einsum("bihs,bjhs->bhij", ch.astype(jnp.float32),
+                            bh.astype(jnp.float32))           # (B,H,c,c)
+        cum_t = cum.transpose(0, 2, 1)                        # (B,H,c)
+        decay = jnp.exp(cum_t[:, :, :, None] - cum_t[:, :, None, :])
+        m = jnp.where(causal[None, None], decay, 0.0)
+        w = scores * m * dtk.transpose(0, 2, 1)[:, :, None, :]  # × dt_j
+        y_intra = jnp.einsum("bhij,bjhp->bihp", w, xk.astype(jnp.float32))
+
+        # ---- inter-chunk ----
+        seg = jnp.exp(cum[:, -1:, :] - cum)                   # (B,c,H)
+        contrib = jnp.einsum("bjh,bjhs,bjhp->bhps",
+                             (seg * dtk).astype(jnp.float32),
+                             bh.astype(jnp.float32),
+                             xk.astype(jnp.float32))          # (B,H,P,S)
+        y_inter = jnp.einsum("bihs,bhps,bih->bihp",
+                             ch.astype(jnp.float32), state,
+                             jnp.exp(cum))
+        new_state = state * jnp.exp(cum[:, -1])[..., None, None] + contrib
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    state = state0
+    ys = []
+    for ci in range(n):
+        sl = slice(ci * chunk, (ci + 1) * chunk)
+        state, yk = chunk_step(state, (x[:, sl], dt[:, sl],
+                                       bmat[:, sl], cmat[:, sl]))
+        ys.append(yk)
+    y = jnp.concatenate(ys, axis=1)
+    return y, state
+
+
+def _project(cfg: ArchConfig, p: Params, x: jax.Array):
+    z = x @ p["w_z"]
+    xin = x @ p["w_x"]
+    bcx = x @ p["w_bc"]
+    dt = x @ p["w_dt"]
+    return z, xin, bcx, dt
+
+
+def mamba_block(cfg: ArchConfig, p: Params, x: jax.Array,
+                state0=None, return_state: bool = False,
+                return_cache: bool = False):
+    """Full Mamba2 mixer. x: (B, L, d)."""
+    s = cfg.ssm
+    bsz, l, d = x.shape
+    nh = s.n_heads(d)
+    gs = s.n_groups * s.d_state
+
+    z, xin, bcx, dt = _project(cfg, p, x)
+    if return_cache:
+        # raw (pre-conv) stream tail feeds the decode conv window
+        conv_tail = jnp.concatenate([xin, bcx], axis=-1)[:, -(s.d_conv - 1):]
+    xin = _causal_conv(xin, p["conv_x"], p["conv_x_b"])
+    bcx = _causal_conv(bcx, p["conv_bc"], p["conv_bc_b"])
+    xh = xin.reshape(bsz, l, nh, s.head_dim)
+    bmat = bcx[..., :gs].reshape(bsz, l, s.n_groups, s.d_state)
+    cmat = bcx[..., gs:].reshape(bsz, l, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    # adaptive chunk: at most 32 chunks (python-unrolled), at least s.chunk
+    chunk = min(max(s.chunk, _ceil_div(l, 32)), l)
+    pad = (-l) % chunk
+    if pad:
+        # zero-pad to a chunk multiple; dt=0 on padding makes it a no-op for
+        # the carried state (decay 1, contribution 0)
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_chunked(xh, dt, a, bmat, cmat, chunk, state0)
+    if pad:
+        y = y[:, :l]
+        xh = xh[:, :l]
+    y = y + (p["D"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(bsz, l, s.d_inner(d))
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    if return_cache:
+        return out, (conv_tail, state)
+    if return_state:
+        return out, state
+    return out
+
+
+def mamba_decode(cfg: ArchConfig, p: Params, x: jax.Array,
+                 conv_state: jax.Array, ssm_state: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token recurrent step.
+
+    x: (B,1,d); conv_state: (B, d_conv-1, di + 2*G*S); ssm_state: (B,H,P,S).
+    """
+    s = cfg.ssm
+    bsz, _, d = x.shape
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gs = s.n_groups * s.d_state
+
+    z, xin, bcx, dt = _project(cfg, p, x)                     # (B,1,·)
+    stream = jnp.concatenate([xin, bcx], axis=-1)[:, 0]       # (B, di+2gs)
+    window = jnp.concatenate([conv_state, stream[:, None]], axis=1)
+    conv_state = window[:, 1:]
+    wcat = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=1)
+    bcat = jnp.concatenate([p["conv_x_b"], p["conv_bc_b"]], axis=0)
+    conv = jax.nn.silu((window * wcat[None]).sum(1) + bcat)   # (B, di+2gs)
+    xh = conv[:, :di].reshape(bsz, nh, s.head_dim)
+    bvec = jnp.repeat(conv[:, di:di + gs].reshape(bsz, s.n_groups, s.d_state),
+                      nh // s.n_groups, axis=1)               # (B,H,S)
+    cvec = jnp.repeat(conv[:, di + gs:].reshape(bsz, s.n_groups, s.d_state),
+                      nh // s.n_groups, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)                                   # (B,H)
+    ssm_state = (ssm_state * decay[..., None, None]
+                 + jnp.einsum("bh,bhs,bhp->bhps", dt,
+                              bvec.astype(jnp.float32),
+                              xh.astype(jnp.float32)))
+    y = jnp.einsum("bhs,bhps->bhp", cvec.astype(jnp.float32), ssm_state)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["w_out"], conv_state, ssm_state

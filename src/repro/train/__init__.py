@@ -1,0 +1,10 @@
+from repro.train.optim import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    lr_schedule,
+)
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "lr_schedule"]

@@ -1,0 +1,148 @@
+"""LM training loop: microbatching, checkpoint/restart, straggler + failure
+handling. Works on any mesh (host mesh for tests, production mesh on pods).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import Rules, param_shardings
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.train import checkpoint as ckpt
+from repro.train.optim import AdamWConfig, AdamWState, adamw_init
+from repro.train.resilience import (
+    FailureInjector,
+    RetryPolicy,
+    StragglerMonitor,
+    run_with_recovery,
+)
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    microbatches: int = 1
+    log_every: int = 10
+    step_timeout_s: float = 0.0          # 0 = no watchdog
+    max_restarts: int = 3
+
+
+def synthetic_lm_batches(cfg: ArchConfig, batch: int, seq: int,
+                         seed: int = 0) -> Iterator[Dict]:
+    """Deterministic synthetic token stream (per-step seeded)."""
+    step = 0
+    while True:
+        rng = np.random.default_rng(seed + step)
+        toks = rng.integers(0, cfg.vocab, (batch, seq + 1), dtype=np.int32)
+        out = {"tokens": jnp.asarray(toks[:, :-1]),
+               "labels": jnp.asarray(toks[:, 1:])}
+        if cfg.prefix_len:
+            out["prefix_embeds"] = jnp.asarray(
+                rng.normal(0, 1, (batch, cfg.prefix_len, cfg.d_model)),
+                jnp.float32)
+        yield out
+        step += 1
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, opt: AdamWConfig, loop: LoopConfig,
+                 mesh=None, batch_fn: Optional[Callable[[int], Dict]] = None,
+                 batch: int = 8, seq: int = 128,
+                 param_dtype=jnp.float32,
+                 failure_injector: Optional[FailureInjector] = None):
+        self.cfg = cfg
+        self.opt = opt
+        self.loop = loop
+        self.mesh = mesh
+        self.monitor = StragglerMonitor()
+        self.failure_injector = failure_injector
+        self.history: list = []
+
+        key = jax.random.PRNGKey(0)
+        self.params = lm.init_params(cfg, key, param_dtype)
+        self.opt_state = adamw_init(self.params)
+        if mesh is not None:
+            rules = Rules(mesh)
+            p_sh = param_shardings(self.params, rules)
+            self.params = jax.device_put(self.params, p_sh)
+            self.opt_state = AdamWState(
+                step=self.opt_state.step,
+                m=jax.device_put(self.opt_state.m, p_sh),
+                v=jax.device_put(self.opt_state.v, p_sh))
+        self.step_fn = jax.jit(make_train_step(cfg, opt, loop.microbatches),
+                               donate_argnums=(0, 1))
+        if batch_fn is None:
+            it = synthetic_lm_batches(cfg, batch, seq)
+            batch_fn = lambda step: next(it)
+        self.batch_fn = batch_fn
+        self.start_step = 0
+        if loop.ckpt_dir and ckpt.latest_step(loop.ckpt_dir) is not None:
+            self._restore()
+
+    # ------------------------------------------------------------------
+    def _save(self, step: int) -> None:
+        if not self.loop.ckpt_dir:
+            return
+        tree = {"params": self.params, "opt": self.opt_state}
+        ckpt.save(self.loop.ckpt_dir, step, tree, keep=self.loop.keep,
+                  extra={"arch": self.cfg.name})
+        log.info("checkpointed step %d", step)
+
+    def _restore(self) -> int:
+        tree_like = {"params": self.params, "opt": self.opt_state}
+        tree, _ = ckpt.restore(self.loop.ckpt_dir, tree_like)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.start_step = ckpt.latest_step(self.loop.ckpt_dir) or 0
+        log.info("restored checkpoint at step %d", self.start_step)
+        return self.start_step
+
+    # ------------------------------------------------------------------
+    def train(self) -> Dict:
+        if self.loop.ckpt_dir:
+            self._save(self.start_step)
+
+        def one_step(step: int) -> None:
+            if self.failure_injector is not None:
+                self.failure_injector.check(step)
+            t0 = time.perf_counter()
+            batch = self.batch_fn(step)
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"non-finite loss at step {step}")
+            dt = time.perf_counter() - t0
+            self.monitor.report("host0", dt)
+            self.history.append(loss)
+            if step % self.loop.log_every == 0:
+                log.info("step %d loss %.4f (%.0f ms)", step, loss, dt * 1e3)
+            if (self.loop.ckpt_dir and (step + 1) % self.loop.ckpt_every == 0):
+                self._save(step + 1)
+
+        def on_failure(step: int, exc: BaseException) -> int:
+            if self.loop.ckpt_dir:
+                return self._restore()
+            # no checkpointing: re-init optimizer step only, keep going
+            return step
+
+        final = run_with_recovery(
+            one_step, start_step=self.start_step, end_step=self.loop.steps,
+            on_failure=on_failure,
+            policy=RetryPolicy(max_restarts=self.loop.max_restarts))
+        if self.loop.ckpt_dir:
+            self._save(final)
+        return {"final_step": final, "losses": self.history,
+                "stragglers": self.monitor.stragglers()}

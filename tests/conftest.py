@@ -1,0 +1,45 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, n_devices: int = 1, timeout: int = 600):
+    """Run python `code` in a fresh process with `n_devices` fake host
+    devices (jax locks the device count at init, so multi-device tests must
+    be subprocesses)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if n_devices > 1:
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count={n_devices}")
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_distinct_negs(rng, tokens, vocab, n_neg):
+    """Negatives satisfying the kernel's per-window distinctness invariant."""
+    S, L = tokens.shape
+    negs = np.zeros((S, L, n_neg), dtype=np.int32)
+    for s in range(S):
+        for t in range(L):
+            c = rng.choice(vocab - 1, size=n_neg, replace=False)
+            negs[s, t] = c + (c >= tokens[s, t])
+    return negs

@@ -1,0 +1,119 @@
+"""Data pipeline: vocab, subsampling, negative sampling, batching."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.w2v import W2VConfig, smoke
+from repro.data.batching import BatchingPipeline
+from repro.data.corpus import synthetic_cluster_corpus, synthetic_zipf_corpus
+from repro.data.negatives import AliasTable, NegativeSampler
+from repro.data.vocab import Vocab
+
+
+def test_vocab_min_count():
+    sents = [["a", "a", "a", "b", "b", "c"]] * 2
+    v = Vocab.build(sents, min_count=3)
+    assert set(v.ids) == {"a", "b"}
+    assert v.counts[v.ids["a"]] == 6
+    assert v.total == 10
+
+
+def test_vocab_encode_drops_oov():
+    v = Vocab.build([["x", "x", "y"]], min_count=2)
+    assert v.encode(["x", "y", "z", "x"]) == [v.ids["x"], v.ids["x"]]
+
+
+@given(st.floats(1e-6, 1e-2))
+@settings(max_examples=20, deadline=None)
+def test_keep_probs_bounded(t):
+    v = Vocab.build([["a"] * 100, ["b"] * 10], min_count=1)
+    p = v.keep_probs(t)
+    assert ((p >= 0) & (p <= 1)).all()
+    # more frequent words have lower keep probability
+    assert p[v.ids["a"]] <= p[v.ids["b"]]
+
+
+def test_alias_table_distribution(rng):
+    w = np.array([1.0, 2.0, 4.0, 8.0])
+    t = AliasTable(w)
+    draws = t.sample(200_000, rng)
+    freq = np.bincount(draws, minlength=4) / len(draws)
+    np.testing.assert_allclose(freq, w / w.sum(), atol=0.01)
+
+
+def test_negative_sampler_distinctness(rng):
+    weights = np.ones(20)
+    sampler = NegativeSampler(weights, seed=0)
+    targets = rng.integers(0, 20, size=(8, 16)).astype(np.int32)
+    negs = sampler.sample_batch(targets, 5)
+    assert negs.shape == (8, 16, 5)
+    # no negative equals its window's target
+    assert not (negs == targets[:, :, None]).any()
+    # within-window distinctness
+    for s in range(8):
+        for t in range(16):
+            assert len(set(negs[s, t].tolist())) == 5
+
+
+def test_negative_sampler_tiny_vocab_fallback(rng):
+    """vocab barely larger than N forces the deterministic fallback."""
+    sampler = NegativeSampler(np.ones(5), seed=0)
+    targets = np.zeros((2, 4), np.int32)
+    negs = sampler.sample_batch(targets, 4)
+    for s in range(2):
+        for t in range(4):
+            win = negs[s, t].tolist()
+            assert 0 not in win and len(set(win)) == 4
+
+
+def test_batching_shapes_and_padding():
+    cfg = smoke(sentences_per_batch=8, max_sentence_len=16)
+    corpus = synthetic_zipf_corpus(vocab_size=100, n_sentences=20,
+                                   mean_len=10, seed=1)
+    pipe = BatchingPipeline(corpus, cfg)
+    batches = list(pipe.batches(pad_len=16))
+    assert all(b.tokens.shape == (8, 16) for b in batches)
+    assert all(b.negs.shape == (8, 16, cfg.negatives) for b in batches)
+    for b in batches:
+        for i, ln in enumerate(b.lengths):
+            if ln:
+                assert (b.tokens[i, ln:] == 0).all()
+    total = sum(b.n_words for b in batches)
+    assert 0 < total <= corpus.n_words
+
+
+def test_stream_packing_mode():
+    cfg = smoke(sentences_per_batch=4, max_sentence_len=32)
+    cfg = W2VConfig(**{**cfg.__dict__, "ignore_delimiters": True})
+    corpus = synthetic_zipf_corpus(vocab_size=50, n_sentences=30,
+                                   mean_len=8, seed=2)
+    pipe = BatchingPipeline(corpus, cfg)
+    batches = list(pipe.batches())
+    # stream packing produces (mostly) full-length pseudo-sentences
+    full = [ln for b in batches for ln in b.lengths if ln > 0]
+    assert max(full) == 32
+    assert sum(1 for x in full if x == 32) >= len(full) - 1
+
+
+def test_batching_speed_counter():
+    cfg = smoke(sentences_per_batch=16)
+    corpus = synthetic_zipf_corpus(vocab_size=200, n_sentences=64, seed=3)
+    pipe = BatchingPipeline(corpus, cfg)
+    list(pipe.batches(pad_len=32))
+    assert pipe.stats.words > 0
+    assert pipe.stats.words_per_sec > 0
+
+
+def test_cluster_corpus_structure():
+    c = synthetic_cluster_corpus(n_clusters=4, words_per_cluster=8,
+                                 n_sentences=50, seed=0)
+    assert c.vocab_size == 32
+    assert c.clusters.shape == (32,)
+    # sentences dominated by one cluster
+    hits = 0
+    for s in c.sentences[:20]:
+        cl = c.clusters[np.asarray(s)]
+        if np.bincount(cl, minlength=4).max() >= len(s) * 0.6:
+            hits += 1
+    assert hits >= 10

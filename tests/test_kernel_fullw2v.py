@@ -1,0 +1,167 @@
+"""Pallas FULL-W2V kernel vs pure-jnp oracle: shape/dtype sweeps +
+hypothesis-generated sentences (interpret mode on CPU)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels.fullw2v import fullw2v_pallas
+from repro.kernels.ref import batch_sgns_ref, sentence_sgns_ref
+from tests.conftest import make_distinct_negs
+
+
+def _run_both(w_in, w_out, tokens, negs, lengths, lr, w_f):
+    a = batch_sgns_ref(jnp.array(w_in), jnp.array(w_out), jnp.array(tokens),
+                       jnp.array(negs), jnp.array(lengths),
+                       jnp.float32(lr), w_f)
+    b = fullw2v_pallas(jnp.array(w_in), jnp.array(w_out), jnp.array(tokens),
+                       jnp.array(negs), jnp.array(lengths),
+                       jnp.float32(lr), w_f, interpret=True)
+    return a, b
+
+
+@pytest.mark.parametrize("d", [128, 256])
+@pytest.mark.parametrize("w_f", [1, 2, 3])
+def test_kernel_matches_ref_sweep(rng, d, w_f):
+    V, S, L, N = 40, 2, 10, 3
+    w_in = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    w_out = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    tokens = rng.integers(0, V, size=(S, L)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, V, N)
+    lengths = np.array([L, L - 3], dtype=np.int32)
+    (a_in, a_out), (b_in, b_out) = _run_both(
+        w_in, w_out, tokens, negs, lengths, 0.05, w_f)
+    np.testing.assert_allclose(np.asarray(a_in), np.asarray(b_in),
+                               atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(a_out), np.asarray(b_out),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("length", [1, 2, 3, 5, 7])
+def test_kernel_edge_lengths(rng, length):
+    """Sentences shorter than the ring buffer exercise preload/flush edges."""
+    V, d, L, N, w_f = 30, 128, 8, 2, 3
+    w_in = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    w_out = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    tokens = rng.integers(0, V, size=(1, L)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, V, N)
+    lengths = np.array([length], dtype=np.int32)
+    (a_in, a_out), (b_in, b_out) = _run_both(
+        w_in, w_out, tokens, negs, lengths, 0.1, w_f)
+    np.testing.assert_allclose(np.asarray(a_in), np.asarray(b_in),
+                               atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(a_out), np.asarray(b_out),
+                               atol=2e-5, rtol=1e-4)
+
+
+@given(
+    st.integers(2, 20),       # vocab (small -> heavy token repetition)
+    st.integers(1, 12),       # max sentence length
+    st.integers(1, 3),        # negatives
+    st.integers(1, 3),        # w_f
+    st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=12, deadline=None)
+def test_kernel_matches_ref_hypothesis(vocab, L, n_neg, w_f, seed):
+    if vocab <= n_neg:
+        vocab = n_neg + 2
+    rng = np.random.default_rng(seed)
+    d = 128
+    w_in = rng.normal(size=(vocab, d)).astype(np.float32) * 0.2
+    w_out = rng.normal(size=(vocab, d)).astype(np.float32) * 0.2
+    tokens = rng.integers(0, vocab, size=(1, L)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, vocab, n_neg)
+    lengths = np.array([rng.integers(1, L + 1)], dtype=np.int32)
+    (a_in, a_out), (b_in, b_out) = _run_both(
+        w_in, w_out, tokens, negs, lengths, 0.05, w_f)
+    np.testing.assert_allclose(np.asarray(a_in), np.asarray(b_in),
+                               atol=3e-5, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(a_out), np.asarray(b_out),
+                               atol=3e-5, rtol=2e-4)
+
+
+def test_kernel_updates_are_nontrivial(rng):
+    V, d, L, N, w_f = 20, 128, 6, 2, 2
+    w_in = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    w_out = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    tokens = rng.integers(0, V, size=(1, L)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, V, N)
+    b_in, b_out = fullw2v_pallas(
+        jnp.array(w_in), jnp.array(w_out), jnp.array(tokens),
+        jnp.array(negs), jnp.array([L], np.int32), jnp.float32(0.1), w_f,
+        interpret=True)
+    assert float(jnp.abs(b_in - w_in).max()) > 1e-4
+    assert float(jnp.abs(b_out - w_out).max()) > 1e-4
+    assert np.isfinite(np.asarray(b_in)).all()
+
+
+def test_sentence_ref_sequentiality(rng):
+    """Batch result == folding sentences one at a time (strict ordering)."""
+    V, d, S, L, N, w_f = 25, 128, 3, 6, 2, 2
+    w_in = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    w_out = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    tokens = rng.integers(0, V, size=(S, L)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, V, N)
+    lengths = np.full((S,), L, np.int32)
+    lr = jnp.float32(0.05)
+
+    a_in, a_out = batch_sgns_ref(jnp.array(w_in), jnp.array(w_out),
+                                 jnp.array(tokens), jnp.array(negs),
+                                 jnp.array(lengths), lr, w_f)
+    c_in, c_out = jnp.array(w_in), jnp.array(w_out)
+    for s in range(S):
+        c_in, c_out = sentence_sgns_ref(c_in, c_out, jnp.array(tokens[s]),
+                                        jnp.array(negs[s]),
+                                        jnp.int32(L), lr, w_f)
+    np.testing.assert_allclose(np.asarray(a_in), np.asarray(c_in), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a_out), np.asarray(c_out), atol=1e-6)
+
+
+def test_pipelined_kernel_matches_ref(rng):
+    """§3.1 prefetch variant: double-buffered negative loads overlap the
+    window GEMMs; must stay bit-identical to the oracle."""
+    V, d, S, L, N, w_f = 40, 128, 3, 12, 3, 2
+    w_in = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    w_out = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    tokens = rng.integers(0, V, size=(S, L)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, V, N)
+    lengths = np.array([L, 7, 1], dtype=np.int32)
+    a_in, a_out = batch_sgns_ref(
+        jnp.array(w_in), jnp.array(w_out), jnp.array(tokens),
+        jnp.array(negs), jnp.array(lengths), jnp.float32(0.05), w_f)
+    b_in, b_out = fullw2v_pallas(
+        jnp.array(w_in), jnp.array(w_out), jnp.array(tokens),
+        jnp.array(negs), jnp.array(lengths), jnp.float32(0.05), w_f,
+        interpret=True, pipeline=True)
+    np.testing.assert_allclose(np.asarray(a_in), np.asarray(b_in),
+                               atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(a_out), np.asarray(b_out),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_pipelined_kernel_conflict_path(rng):
+    """Adjacent windows sharing output rows exercise the hazard branch
+    (conflicting rows are loaded synchronously after write-back)."""
+    V, d, L, N, w_f = 30, 128, 8, 2, 2
+    w_in = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    w_out = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    tokens = rng.integers(0, V, size=(1, L)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, V, N)
+    # force window t+1's first negative == window t's target (hazard)
+    for t in range(L - 1):
+        cand = tokens[0, t]
+        if cand != tokens[0, t + 1] and cand not in negs[0, t + 1, 1:]:
+            negs[0, t + 1, 0] = cand
+    lengths = np.array([L], dtype=np.int32)
+    a = batch_sgns_ref(jnp.array(w_in), jnp.array(w_out), jnp.array(tokens),
+                       jnp.array(negs), jnp.array(lengths),
+                       jnp.float32(0.08), w_f)
+    b = fullw2v_pallas(jnp.array(w_in), jnp.array(w_out), jnp.array(tokens),
+                       jnp.array(negs), jnp.array(lengths),
+                       jnp.float32(0.08), w_f, interpret=True, pipeline=True)
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]),
+                               atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]),
+                               atol=2e-5, rtol=1e-4)

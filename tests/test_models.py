@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests (reduced same-family configs) + SSD/flash
+correctness against naive references."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke, list_archs
+from repro.models import lm
+from repro.models.layers import causal_attention
+from repro.models.ssm import ssd_chunked
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_grad(arch, rng):
+    """One forward + one grad step on CPU: shapes + finiteness."""
+    cfg = get_smoke(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    pref = None
+    if cfg.prefix_len:
+        pref = jnp.asarray(rng.normal(size=(B, cfg.prefix_len, cfg.d_model)),
+                           jnp.float32)
+    logits = lm.forward(cfg, params, toks, pref)
+    assert logits.shape == (B, S + cfg.prefix_len, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.lm_loss(cfg, p, toks, labels, pref))(params)
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(g).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-1.3b",
+                                  "jamba-1.5-large-398b", "arctic-480b"])
+def test_prefill_decode_matches_forward(arch, rng):
+    """decode(prefill(x[:S])) logits == forward(x[:S+1]) at position S."""
+    cfg = get_smoke(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+    pref = None
+    if cfg.prefix_len:
+        pref = jnp.asarray(rng.normal(size=(B, cfg.prefix_len, cfg.d_model)),
+                           jnp.float32)
+    full = lm.forward(cfg, params, toks, pref)
+    _, cache, clen = lm.prefill(cfg, params, toks[:, :S], pref,
+                                cache_dtype=jnp.float32)
+
+    def pad_kv(c):
+        out = []
+        for blk in c:
+            nb = {}
+            for k, v in blk.items():
+                nb[k] = jnp.pad(v, [(0, 0), (0, 0), (0, 1), (0, 0), (0, 0)]) \
+                    if k in ("k", "v") else v
+            out.append(nb)
+        return tuple(out)
+
+    dec, _ = lm.decode_step(cfg, params, pad_kv(cache), clen,
+                            toks[:, S:S + 1])
+    ref = np.asarray(full[:, cfg.prefix_len + S])
+    err = np.abs(ref - np.asarray(dec)).max() / (np.abs(ref).max() + 1e-9)
+    assert err < 1e-4, err
+
+
+def test_unrolled_matches_scanned(rng):
+    """scan_layers=False (analysis path) must be numerically identical."""
+    cfg = get_smoke("qwen3-8b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(2))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    a = lm.forward(cfg, params, toks)
+    b = lm.forward(dataclasses.replace(cfg, scan_layers=False), params, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_flash_attention_matches_naive(rng):
+    b, s, nh, nkv, hd = 2, 37, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, nkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, nkv, hd)), jnp.float32)
+    out = causal_attention(q, k, v, n_q_chunks=5, n_kv_chunks=3)
+
+    # naive reference
+    qg = q.reshape(b, s, nkv, nh // nkv, hd)
+    logits = jnp.einsum("bqkgh,bskh->bqkgs", qg, k) / hd ** 0.5
+    ii = jnp.arange(s)
+    causal = ii[:, None] >= ii[None, :]                    # (q, s)
+    logits = jnp.where(causal[None, :, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, -1)
+    ref = jnp.einsum("bqkgs,bskh->bqkgh", w, v).reshape(b, s, nh, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_ssd_chunked_matches_sequential(rng):
+    """Chunked SSD dual form == token-by-token linear recurrence."""
+    b, l, h, p, g, s, chunk = 1, 24, 2, 4, 1, 8, 8
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(b, l, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.1, 1.0, size=(h,)), jnp.float32)
+    bmat = jnp.asarray(rng.normal(size=(b, l, g, s)), jnp.float32)
+    cmat = jnp.asarray(rng.normal(size=(b, l, g, s)), jnp.float32)
+
+    y, state = ssd_chunked(x, dt, a, bmat, cmat, chunk)
+
+    # sequential recurrence: st = st*exp(dt*a) + dt*B⊗x ; y = C·st
+    st = np.zeros((b, h, p, s), np.float32)
+    ys = np.zeros((b, l, h, p), np.float32)
+    for t in range(l):
+        decay = np.exp(np.asarray(dt[:, t]) * np.asarray(a))   # (b,h)
+        bt = np.repeat(np.asarray(bmat[:, t]), h // g, 1)       # (b,h,s)
+        ct = np.repeat(np.asarray(cmat[:, t]), h // g, 1)
+        xt = np.asarray(x[:, t])                                # (b,h,p)
+        st = (st * decay[:, :, None, None]
+              + np.einsum("bh,bhs,bhp->bhps", np.asarray(dt[:, t]), bt, xt))
+        ys[:, t] = np.einsum("bhs,bhps->bhp", ct, st)
+    np.testing.assert_allclose(np.asarray(y), ys, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), st, atol=1e-4, rtol=1e-3)
+
+
+def test_param_count_matches_init(rng):
+    """Analytic param_count (used for MODEL_FLOPS) == actual init size."""
+    for arch in ["qwen3-8b", "mamba2-1.3b", "arctic-480b",
+                 "jamba-1.5-large-398b"]:
+        cfg = get_smoke(arch)
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        assert actual == cfg.param_count(), (arch, actual, cfg.param_count())

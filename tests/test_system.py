@@ -1,0 +1,82 @@
+"""End-to-end behaviour tests for the paper's system."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.w2v import W2VConfig, smoke
+from repro.core.baselines import matrix_sgns
+from repro.core.quality import evaluate
+from repro.core.trainer import W2VTrainer, init_state
+from repro.data.batching import BatchingPipeline
+from repro.data.corpus import synthetic_cluster_corpus
+from repro.kernels import ops
+
+
+def test_fullw2v_quality_matches_pword2vec_baseline():
+    """Paper Table 7: FULL-W2V must match the shared-negative baseline's
+    embedding quality (same corpus, same hyperparameters, same epochs)."""
+    cfg = smoke(epochs=5, dim=32, sentences_per_batch=64)
+    corpus = synthetic_cluster_corpus(n_clusters=6, words_per_cluster=12,
+                                      n_sentences=500, mean_len=12, seed=0)
+    inv = None
+    scores = {}
+    for name in ("fullw2v", "pword2vec"):
+        pipe = BatchingPipeline(corpus, cfg)
+        if inv is None:
+            inv = np.zeros(pipe.vocab.size, dtype=int)
+            for w, i in pipe.vocab.ids.items():
+                inv[i] = corpus.clusters[w]
+        st = init_state(pipe.vocab.size, cfg)
+        wi, wo = st.w_in, st.w_out
+        words, total = 0, pipe.epoch_words * cfg.epochs
+        for _ in range(cfg.epochs):
+            for b in pipe.batches(pad_len=48):
+                lr = jnp.float32(cfg.lr * max(1 - words / total, 1e-4))
+                if name == "fullw2v":
+                    wi, wo = ops.sgns_batch_update(
+                        wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
+                        jnp.asarray(b.lengths), lr, cfg.fixed_window,
+                        backend="jnp")
+                else:
+                    wi, wo = matrix_sgns(
+                        wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
+                        jnp.asarray(b.lengths), lr, cfg.fixed_window)
+                words += b.n_words
+        scores[name] = evaluate(np.asarray(wi), inv, seed=0)
+
+    a, b = scores["fullw2v"], scores["pword2vec"]
+    assert a["separation"] > 0.15
+    # statistical equivalence: within 25% of each other
+    assert abs(a["separation"] - b["separation"]) < 0.25 * max(
+        a["separation"], b["separation"]), scores
+
+
+def test_semantic_ordering_strictness():
+    """Strict sequential window ordering: permuting sentences changes the
+    result (the algorithm is order-dependent by design), while identical
+    inputs reproduce bit-identical embeddings."""
+    cfg = smoke(epochs=1)
+    corpus = synthetic_cluster_corpus(n_clusters=4, words_per_cluster=8,
+                                      n_sentences=60, mean_len=10, seed=1)
+    pipe = BatchingPipeline(corpus, cfg)
+    batch = next(pipe.batches(pad_len=32))
+    st = init_state(pipe.vocab.size, cfg)
+
+    def run(tokens, negs, lengths):
+        return ops.sgns_batch_update(
+            jnp.array(st.w_in), jnp.array(st.w_out), jnp.asarray(tokens),
+            jnp.asarray(negs), jnp.asarray(lengths), jnp.float32(0.05),
+            cfg.fixed_window, backend="jnp")
+
+    a1, _ = run(batch.tokens, batch.negs, batch.lengths)
+    a2, _ = run(batch.tokens, batch.negs, batch.lengths)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+    perm = np.random.default_rng(0).permutation(batch.tokens.shape[0])
+    b1, _ = run(batch.tokens[perm], batch.negs[perm], batch.lengths[perm])
+    assert np.abs(np.asarray(a1) - np.asarray(b1)).max() > 0
+
+
+def test_fixed_window_is_half_of_w():
+    assert W2VConfig(window=5).fixed_window == 3
+    assert W2VConfig(window=10).fixed_window == 5
+    assert W2VConfig(window=1).fixed_window == 1

@@ -1,0 +1,64 @@
+"""End-to-end W2V training behaviour: learning, LR decay, quality."""
+import numpy as np
+import pytest
+
+from repro.configs.w2v import smoke
+from repro.core.quality import evaluate, spearman
+from repro.core.trainer import W2VTrainer, init_state
+from repro.data.batching import BatchingPipeline
+from repro.data.corpus import synthetic_cluster_corpus
+
+
+def _setup(epochs=6, dim=32, seed=0):
+    cfg = smoke(epochs=epochs, dim=dim)
+    corpus = synthetic_cluster_corpus(n_clusters=6, words_per_cluster=12,
+                                      n_sentences=500, mean_len=12,
+                                      seed=seed)
+    pipe = BatchingPipeline(corpus, cfg)
+    inv = np.zeros(pipe.vocab.size, dtype=int)
+    for w, i in pipe.vocab.ids.items():
+        inv[i] = corpus.clusters[w]
+    return cfg, corpus, pipe, inv
+
+
+def test_training_learns_cluster_structure():
+    cfg, corpus, pipe, inv = _setup()
+    tr = W2VTrainer(pipe, cfg, backend="jnp")
+    tr.train()
+    m = evaluate(tr.embeddings(), inv, seed=0)
+    assert m["separation"] > 0.2, m
+    assert m["nn_purity"] > 0.7, m
+    assert m["spearman"] > 0.3, m
+
+
+def test_lr_decays_linearly():
+    cfg, corpus, pipe, inv = _setup(epochs=2)
+    tr = W2VTrainer(pipe, cfg, backend="jnp")
+    lr0 = tr.current_lr()
+    tr.train()
+    assert tr.current_lr() < lr0
+    assert tr.current_lr() >= cfg.lr * cfg.min_lr_frac - 1e-12
+
+
+def test_untrained_embeddings_have_no_structure():
+    cfg, corpus, pipe, inv = _setup()
+    st = init_state(pipe.vocab.size, cfg)
+    m = evaluate(np.asarray(st.w_in), inv, seed=0)
+    assert abs(m["separation"]) < 0.05
+
+
+def test_nearest_neighbours_same_cluster():
+    cfg, corpus, pipe, inv = _setup(epochs=8)
+    tr = W2VTrainer(pipe, cfg, backend="jnp")
+    tr.train()
+    hits = 0
+    for wid in range(0, 30, 3):
+        nn = tr.nearest(wid, k=3)
+        hits += (inv[nn] == inv[wid]).sum()
+    assert hits >= 15  # of 30
+
+
+def test_spearman_helper():
+    a = np.array([1.0, 2.0, 3.0, 4.0])
+    assert abs(spearman(a, a * 10) - 1.0) < 1e-9
+    assert abs(spearman(a, -a) + 1.0) < 1e-9

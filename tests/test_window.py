@@ -1,0 +1,61 @@
+"""Ring-buffer lifetime state machine properties (core/window.py)."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.window import (
+    RingBufferSim,
+    lifetime,
+    loads_and_stores,
+    ring_slots,
+    schedule,
+    slot_of,
+    traffic_reduction,
+)
+
+
+@given(st.integers(1, 40), st.integers(1, 5))
+@settings(max_examples=60, deadline=None)
+def test_every_position_loaded_and_stored_once(length, w_f):
+    loads, stores = loads_and_stores(length, w_f)
+    # lifetime reuse: each position touches HBM exactly twice (1 load +
+    # 1 store) regardless of how many windows reuse it — the paper's claim
+    assert loads == length
+    assert stores == length
+
+
+@given(st.integers(1, 40), st.integers(1, 5))
+@settings(max_examples=60, deadline=None)
+def test_residency_invariant(length, w_f):
+    """At every window t, all context positions of t are buffer-resident."""
+    RingBufferSim(length, w_f).run()
+
+
+@given(st.integers(1, 60), st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_slot_conflict_freedom(length, w_f):
+    """Positions p and p+R have disjoint lifetimes, so slot reuse is safe."""
+    r = ring_slots(w_f)
+    for p in range(length - r):
+        _, last = lifetime(p, w_f, length)
+        first, _ = lifetime(p + r, w_f, length)
+        assert last < first
+        assert slot_of(p, w_f) == slot_of(p + r, w_f)
+
+
+def test_schedule_order_store_before_load():
+    evs = schedule(10, 2)
+    seen = {}
+    for e in evs:
+        if e.kind == "load":
+            s = slot_of(e.position, 2)
+            if s in seen:
+                assert seen[s] == "stored", f"slot {s} overwritten unsaved"
+            seen[s] = "loaded"
+        elif e.kind == "store":
+            seen[slot_of(e.position, 2)] = "stored"
+
+
+def test_traffic_reduction_values():
+    # paper §3.2: ~86% for W_f=3, ~91% for W_f=5
+    assert abs(traffic_reduction(3) - 6 / 7) < 1e-9
+    assert abs(traffic_reduction(5) - 10 / 11) < 1e-9
