@@ -1,0 +1,109 @@
+"""Tile-size sweep for the window-tile batched kernel (DESIGN.md §4).
+
+For T ∈ {1, 2, 4, 8, 16} this measures, on a Zipf corpus with the paper's
+subsampling enabled:
+
+  * per-window DMA count and GEMM invocations — replayed exactly from the
+    host tile plan (`plan_costs` mirrors the kernel's runtime guards, so
+    these are the counts the interpret-mode kernel issues),
+  * the reduction factor vs the sequential (T=1) kernel,
+  * strict-tile fraction and the VMEM scratch footprint,
+  * embedding quality (cluster separation) trained with the tiled oracle —
+    the ordering-relaxation cost of T>1.
+
+The acceptance gate for this PR: ≥2× DMA + GEMM reduction at T=8 with
+quality within 1% of the sequential baseline at T ≤ 8.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import (bench_cfg, fmt_row, train_w2v,
+                               w2v_seq_update, w2v_tiled_update)
+from repro.core.quality import evaluate
+from repro.data.batching import BatchingPipeline, plan_costs, plan_tiles
+from repro.data.corpus import synthetic_cluster_corpus, synthetic_zipf_corpus
+from repro.kernels.fullw2v import tiled_scratch_rows
+
+TILES = (1, 2, 4, 8, 16)
+QUALITY_EPOCHS = 8     # compare converged runs (relaxation affects early
+                       # epochs most; the gate is end quality)
+
+
+def _vmem_bytes(tile: int, w_f: int, n_neg: int, d: int,
+                gemm_windows: int = 0) -> int:
+    """Scratch footprint of `_kernel_tiled` (same dims as the kernel)."""
+    rows = sum(tiled_scratch_rows(tile, w_f, n_neg, gemm_windows).values())
+    return rows * d * 4
+
+
+def _cost_sweep() -> Dict[int, Dict[str, float]]:
+    corpus = synthetic_zipf_corpus(vocab_size=2000, n_sentences=512,
+                                   mean_len=48, seed=0)
+    out: Dict[int, Dict[str, float]] = {}
+    for t in TILES:
+        cfg = bench_cfg(subsample_t=1e-3, max_sentence_len=96,
+                        tile_windows=t)
+        pipe = BatchingPipeline(corpus, cfg)
+        batch = next(pipe.batches(pad_len=96))
+        plan = batch.plan if batch.plan is not None else plan_tiles(
+            batch.tokens, batch.negs, batch.lengths, 1)
+        costs = plan_costs(plan, batch.lengths, cfg.negatives)
+        # strict fraction over *active* tiles only (tiles wholly past the
+        # sentence end are always non-strict and would bias this low)
+        nt = plan.n_tiles
+        act = (np.arange(nt)[None, :] * t) < batch.lengths[:, None]
+        costs["strict_frac"] = (float(plan.strict[act].mean())
+                                if act.any() else 0.0)
+        costs["vmem_bytes"] = _vmem_bytes(t, cfg.fixed_window,
+                                          cfg.negatives, cfg.dim)
+        out[t] = costs
+    return out
+
+
+def _quality_sweep() -> Dict[int, float]:
+    corpus = synthetic_cluster_corpus(n_clusters=8, words_per_cluster=16,
+                                      n_sentences=400, mean_len=14, seed=0)
+    out: Dict[int, float] = {}
+    for t in TILES:
+        cfg = bench_cfg(dim=64, sentences_per_batch=128,
+                        max_sentence_len=48, tile_windows=t)
+        pipe = BatchingPipeline(corpus, cfg)
+        w_f = cfg.fixed_window
+        update = (w2v_tiled_update(t, w_f, use_batch_plan=True) if t > 1
+                  else w2v_seq_update("jnp", w_f))
+        emb = train_w2v(update, pipe, cfg, epochs=QUALITY_EPOCHS)
+        inv = np.zeros(pipe.vocab.size, dtype=int)
+        for w, i in pipe.vocab.ids.items():
+            inv[i] = corpus.clusters[w]
+        out[t] = evaluate(emb, inv, seed=1)["separation"]
+    return out
+
+
+def run() -> List[str]:
+    costs = _cost_sweep()
+    quality = _quality_sweep()
+    base = costs[1]
+    q_base = quality[1]
+    rows = []
+    for t in TILES:
+        c = costs[t]
+        dma_red = base["dma_per_window"] / c["dma_per_window"]
+        gemm_red = base["gemms_per_window"] / c["gemms_per_window"]
+        rows.append(fmt_row(
+            f"tile_sweep/T{t}", 0.0,
+            f"dma_per_window={c['dma_per_window']:.2f} "
+            f"gemms_per_window={c['gemms_per_window']:.3f} "
+            f"dma_reduction_vs_T1={dma_red:.2f} "
+            f"gemm_reduction_vs_T1={gemm_red:.2f} "
+            f"strict_frac={c['strict_frac']:.3f} "
+            f"vmem_kib={c['vmem_bytes'] / 1024:.0f} "
+            f"separation={quality[t]:.3f} "
+            f"quality_ratio_vs_T1={quality[t] / max(q_base, 1e-9):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -11,11 +11,13 @@ import time
 from typing import Callable, Dict, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.w2v import W2VConfig
-from repro.data.batching import BatchingPipeline
+from repro.data.batching import BatchingPipeline, plan_tiles
 from repro.data.corpus import synthetic_cluster_corpus, synthetic_zipf_corpus
+from repro.kernels import ops
 
 
 def bench_cfg(**kw) -> W2VConfig:
@@ -32,6 +34,54 @@ def bench_pipeline(vocab=2000, sentences=2048, seed=0,
     corpus = synthetic_zipf_corpus(vocab_size=vocab, n_sentences=sentences,
                                    mean_len=24, seed=seed)
     return BatchingPipeline(corpus, cfg), cfg, corpus
+
+
+# ---------------------------------------------------------------------------
+# Shared W2V training loop for quality measurements (used by bench_quality
+# and bench_tile_sweep, so both measure the identical procedure).
+# ---------------------------------------------------------------------------
+def train_w2v(update: Callable, pipe: BatchingPipeline, cfg: W2VConfig,
+              epochs: int, pad_len: int = 48) -> np.ndarray:
+    """Train with linear LR decay; `update(wi, wo, batch, lr)` does one
+    batch. Returns the input embeddings."""
+    from repro.core.trainer import init_state
+
+    st = init_state(pipe.vocab.size, cfg)
+    wi, wo = st.w_in, st.w_out
+    words_seen, total = 0, pipe.epoch_words * epochs
+    for _ in range(epochs):
+        for b in pipe.batches(pad_len=pad_len):
+            lr = jnp.float32(
+                cfg.lr * max(1 - words_seen / total, cfg.min_lr_frac))
+            wi, wo = update(wi, wo, b, lr)
+            words_seen += b.n_words
+    return np.asarray(wi)
+
+
+def w2v_seq_update(backend: str, w_f: int) -> Callable:
+    def update(wi, wo, b, lr):
+        return ops.sgns_batch_update(
+            wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
+            jnp.asarray(b.lengths), lr, w_f, backend=backend)
+    return update
+
+
+def w2v_tiled_update(tile: int, w_f: int, use_batch_plan: bool = False,
+                     gemm_windows: int = 0) -> Callable:
+    """Tiled-oracle update; `use_batch_plan` consumes the pipeline's own
+    plan (tile-shared negatives, cfg.tile_windows path), otherwise a plan
+    is built for the batch's per-window negatives (isolates the ordering
+    relaxation from the sampling change)."""
+    def update(wi, wo, b, lr):
+        p = b.plan if (use_batch_plan and b.plan is not None) else \
+            plan_tiles(b.tokens, b.negs, b.lengths, tile)
+        return ops.sgns_batch_update_tiled(
+            wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
+            jnp.asarray(b.lengths), lr, w_f, p.tile,
+            jnp.asarray(p.uniq), jnp.asarray(p.scatter),
+            jnp.asarray(p.ucount), jnp.asarray(p.strict),
+            backend="jnp_tiled", gemm_windows=gemm_windows)
+    return update
 
 
 def time_fn(fn: Callable[[], None], warmup: int = 1, iters: int = 3

@@ -23,12 +23,24 @@ class W2VConfig:
     sentences_per_batch: int = 10_000  # S (paper §4.2)
     ignore_delimiters: bool = False    # paper §4.1 stream-packing mode
     neg_table_size: int = 1 << 20
+    tile_windows: int = 1              # T — windows fused per kernel step
+                                       # (DESIGN.md §4; T=1 == sequential)
+    tile_gemm_windows: int = 4         # G — windows per GEMM group inside a
+                                       # tile (bounds value staleness)
     seed: int = 0
 
     @property
     def fixed_window(self) -> int:
         """W_f = ceil(W/2) — FULL-W2V's fixed context width (§3.2)."""
         return (self.window + 1) // 2
+
+
+def resolve_gemm_windows(tile: int, gemm_windows: int = 0) -> int:
+    """Resolve the G knob (windows per GEMM group, DESIGN.md §4): 0 means
+    the default min(tile, 4); always clamped to the tile size. Single source
+    of truth for kernel, oracle, cost model, and benchmarks."""
+    g = gemm_windows if gemm_windows > 0 else min(tile, 4)
+    return max(1, min(g, tile))
 
 
 # Reduced config for CPU tests / examples.

@@ -65,6 +65,13 @@ class W2VTrainer:
         self.total_words = max(1, pipeline.epoch_words * cfg.epochs)
         self.words_per_sec = 0.0
         if mesh is not None:
+            if cfg.tile_windows > 1:
+                # the sharded update path has no tiled dispatch yet; running
+                # it would silently train tile-shared negatives on the
+                # sequential kernel — refuse instead of mis-training
+                raise NotImplementedError(
+                    "tile_windows > 1 is not supported with a device mesh "
+                    "yet; use the single-device path or tile_windows=1")
             self._dp_update = self._build_dp_update(mesh)
 
     # -- learning-rate schedule (classic linear decay) ----------------------
@@ -104,6 +111,16 @@ class W2VTrainer:
         if self.mesh is not None:
             self.state.w_in, self.state.w_out = self._dp_update(
                 self.state.w_in, self.state.w_out, toks, negs, lens, lr)
+        elif batch.plan is not None and batch.plan.tile > 1:
+            # window-tile batched path (cfg.tile_windows > 1, DESIGN.md §4)
+            p = batch.plan
+            self.state.w_in, self.state.w_out = ops.sgns_batch_update_tiled(
+                self.state.w_in, self.state.w_out, toks, negs, lens, lr,
+                self.cfg.fixed_window, p.tile,
+                jnp.asarray(p.uniq), jnp.asarray(p.scatter),
+                jnp.asarray(p.ucount), jnp.asarray(p.strict),
+                backend=ops.tiled_backend(self.backend),
+                gemm_windows=self.cfg.tile_gemm_windows)
         else:
             self.state.w_in, self.state.w_out = ops.sgns_batch_update(
                 self.state.w_in, self.state.w_out, toks, negs, lens, lr,

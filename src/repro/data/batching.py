@@ -6,7 +6,12 @@ Responsibilities (all host-side, exactly as the paper assigns them):
     "<0.5% additional word pairings", better utilization),
   * pack sentences into fixed-shape (S, L) int32 batches + lengths,
   * pre-sample per-window negatives (S, L, N) with the distinctness
-    invariant the kernel relies on.
+    invariant the kernel relies on,
+  * conflict-aware window tiling (DESIGN.md §4): group T consecutive
+    windows per kernel step, deduplicate the tile's T·(N+1) output rows
+    into a compacted unique-row list + scatter map, and flag tiles whose
+    output rows collide across windows (``strict``) so the kernel can
+    fall back to the exact sequential path for them.
 
 The device step consumes dense arrays only — no indirection on-device.
 """
@@ -25,11 +30,157 @@ from repro.data.vocab import Vocab
 
 
 @dataclasses.dataclass
+class TilePlan:
+    """Host-side schedule for the tiled kernel (`_kernel_tiled`).
+
+    A *tile* is ``tile`` consecutive window positions of one sentence. Its
+    output rows are the T targets + T·N negatives, laid out slot-major:
+    slot ``w*(N+1) + 0`` is window ``t0+w``'s target, slots ``w*(N+1)+1..N``
+    its negatives. The plan compacts those slots to unique vocab rows so the
+    kernel fetches/writes each row exactly once per tile (write-once).
+
+    Collision policy (DESIGN.md §4): a *negative* repeated across windows is
+    fused — it is exactly pWord2Vec's shared-negative relaxation lifted from
+    one window to T, and dedup keeps the fetch/write-once invariant. A
+    repeat that touches a *target* slot (target/target, or target appearing
+    as another window's negative) conflicts on the positive label and is
+    where the pre-tile-value relaxation distorts most, so those tiles are
+    marked ``strict`` and replayed sequentially by the kernel.
+    """
+    tile: int             # T — windows per tile
+    uniq: np.ndarray      # (S, nt, T*(N+1)) int32 — unique rows, first-seen
+                          # order; columns >= ucount are 0 (masked)
+    scatter: np.ndarray   # (S, nt, T*(N+1)) int32 — slot -> column in uniq;
+                          # slots of windows beyond the sentence map to 0
+    ucount: np.ndarray    # (S, nt) int32 — number of valid uniq columns
+    strict: np.ndarray    # (S, nt) int32 — 1 iff a repeated row involves a
+                          # *target* slot (sequential fallback; see below)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.uniq.shape[1]
+
+
+def plan_tiles(tokens: np.ndarray, negs: np.ndarray, lengths: np.ndarray,
+               tile: int) -> TilePlan:
+    """Build the conflict-aware tile schedule for a batch.
+
+    Fully vectorised (no per-tile Python loop): first-seen-order dedup is
+    computed with a stable argsort per tile row. First-seen order matters —
+    it makes the T=1 plan lay rows out exactly as the sequential kernel
+    ([target, neg_1..neg_N]), which is what makes `_kernel_tiled` at T=1
+    bit-identical to `_kernel`.
+    """
+    if tile < 1:
+        raise ValueError(f"tile must be >= 1, got {tile}")
+    S, L = tokens.shape
+    N = negs.shape[-1]
+    m = N + 1
+    nt = -(-L // tile)                    # ceil(L / tile)
+    Lp = nt * tile
+    M = tile * m                          # output slots per tile
+
+    tk = np.pad(tokens, ((0, 0), (0, Lp - L))).astype(np.int64)
+    ng = np.pad(negs, ((0, 0), (0, Lp - L), (0, 0))).astype(np.int64)
+    slots = np.concatenate([tk[..., None], ng], axis=-1)   # (S, Lp, m)
+    rows = slots.reshape(S * nt, M)
+    valid = (np.arange(Lp)[None, :] < lengths[:, None])    # (S, Lp) windows
+    valid = np.repeat(valid[..., None], m, axis=-1).reshape(S * nt, M)
+
+    # Invalid slots (windows past the sentence end — always a suffix of the
+    # tile) get one shared sentinel that first-occurs after every valid slot,
+    # so its dedup group lands past the valid columns.
+    sentinel = np.int64(1) << 40
+    rows = np.where(valid, rows, sentinel)
+
+    B = S * nt
+    ar = np.arange(M)[None, :]
+    order = np.argsort(rows, axis=1, kind="stable")        # (B, M)
+    srt = np.take_along_axis(rows, order, axis=1)
+    new = np.ones((B, M), dtype=bool)
+    new[:, 1:] = srt[:, 1:] != srt[:, :-1]
+    # index (sorted order) of each value's group start, forward-filled
+    gstart = np.maximum.accumulate(np.where(new, ar, 0), axis=1)
+    # original slot of each value's first occurrence (stable sort => min slot)
+    first_sorted = np.take_along_axis(order, gstart, axis=1)
+    fs = np.empty((B, M), dtype=np.int64)
+    np.put_along_axis(fs, order, first_sorted, axis=1)     # per-slot first
+    is_first = fs == ar
+    ranks = np.cumsum(is_first, axis=1) - 1                # first-seen rank
+    cols = np.take_along_axis(ranks, fs, axis=1)           # slot -> column
+
+    ucount = (is_first & valid).sum(axis=1)
+    # per-slot multiplicity of the slot's dedup group (valid slots only)
+    occ = np.zeros((B, M), dtype=np.int32)
+    np.add.at(occ, (np.arange(B)[:, None], cols), valid.astype(np.int32))
+    slot_mult = np.take_along_axis(occ, cols, axis=1)
+    is_target = (np.arange(M) % m == 0)[None, :]
+    strict = ((slot_mult > 1) & is_target & valid).any(axis=1)
+    strict = strict.astype(np.int32)
+
+    uniq = np.zeros((B, M), dtype=np.int64)
+    np.put_along_axis(uniq, cols, rows, axis=1)
+    uniq[ar >= ucount[:, None]] = 0                        # mask padding
+    scatter = np.where(valid, cols, 0)
+
+    return TilePlan(
+        tile=tile,
+        uniq=uniq.reshape(S, nt, M).astype(np.int32),
+        scatter=scatter.reshape(S, nt, M).astype(np.int32),
+        ucount=ucount.reshape(S, nt).astype(np.int32),
+        strict=strict.reshape(S, nt),
+    )
+
+
+def plan_costs(plan: TilePlan, lengths: np.ndarray, n_neg: int,
+               gemm_windows: int = 0) -> dict:
+    """Exact per-batch DMA / GEMM counts the tiled kernel will issue, by
+    replaying the plan against the kernel's runtime guards (the kernel's
+    control flow is deterministic given the plan). Used by
+    ``benchmarks/bench_tile_sweep.py``; the T=1 numbers reproduce the
+    sequential kernel's costs.
+
+    Counts: one "dma" = one single-row ``make_async_copy``; one "gemm" = one
+    ``dot_general`` issued to the MXU (3 per window update: corr, d_ctx,
+    d_out; fused tiles issue 3 per GEMM group of ``gemm_windows``).
+    """
+    from repro.configs.w2v import resolve_gemm_windows
+    m = n_neg + 1
+    T = plan.tile
+    G = resolve_gemm_windows(T, gemm_windows)
+    S, nt = plan.ucount.shape
+    windows = int(lengths.sum())
+    ring_dmas = 2 * windows            # each position: 1 load + 1 store
+    out_dmas = 0
+    gemms = 0
+    for s in range(S):
+        ln = int(lengths[s])
+        for i in range(-(-ln // T)):
+            n_valid = min(T, ln - i * T)
+            if plan.strict[s, i]:
+                out_dmas += 2 * m * n_valid    # per-window fetch + write
+                gemms += 3 * n_valid
+            else:
+                out_dmas += 2 * int(plan.ucount[s, i])
+                gemms += 3 * (-(-n_valid // G))   # one triple per group
+    return {
+        "windows": windows,
+        "dma_total": ring_dmas + out_dmas,
+        "dma_ring": ring_dmas,
+        "dma_out_rows": out_dmas,
+        "gemms": gemms,
+        "dma_per_window": (ring_dmas + out_dmas) / max(windows, 1),
+        "gemms_per_window": gemms / max(windows, 1),
+    }
+
+
+@dataclasses.dataclass
 class Batch:
     tokens: np.ndarray    # (S, L) int32
     negs: np.ndarray      # (S, L, N) int32
     lengths: np.ndarray   # (S,) int32
     n_words: int          # real (unpadded) words in the batch
+    plan: Optional[TilePlan] = None   # set when cfg.tile_windows > 1
 
 
 @dataclasses.dataclass
@@ -107,15 +258,25 @@ class BatchingPipeline:
     def _finalize(self, toks: np.ndarray, lens: np.ndarray,
                   pad_rows: int = 0) -> Batch:
         t0 = time.perf_counter()
-        negs = self.sampler.sample_batch(toks, self.cfg.negatives)
+        if self.cfg.tile_windows > 1:
+            # tile-shared negatives (Ji et al. HogBatch): one N-set per T
+            # consecutive windows — the dedup win of the tiled kernel
+            negs = self.sampler.sample_batch_tiled(
+                toks, self.cfg.negatives, self.cfg.tile_windows, lens)
+        else:
+            negs = self.sampler.sample_batch(toks, self.cfg.negatives)
         if pad_rows:
             toks = np.pad(toks, ((0, pad_rows), (0, 0)))
             negs = np.pad(negs, ((0, pad_rows), (0, 0), (0, 0)))
             lens = np.pad(lens, (0, pad_rows))
         n_words = int(lens.sum())
+        plan = None
+        if self.cfg.tile_windows > 1:
+            plan = plan_tiles(toks, negs, lens, self.cfg.tile_windows)
         self.stats.seconds += time.perf_counter() - t0
         self.stats.words += n_words
-        return Batch(tokens=toks, negs=negs, lengths=lens, n_words=n_words)
+        return Batch(tokens=toks, negs=negs, lengths=lens, n_words=n_words,
+                     plan=plan)
 
     @property
     def epoch_words(self) -> int:

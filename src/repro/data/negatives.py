@@ -72,6 +72,68 @@ class NegativeSampler:
             bad = self._conflicts(targets, negs)
         return negs
 
+    def sample_batch_tiled(self, targets: np.ndarray, n_neg: int,
+                           tile: int,
+                           lengths: Optional[np.ndarray] = None
+                           ) -> np.ndarray:
+        """One shared N-set per *tile* of ``tile`` consecutive windows,
+        broadcast to every window of the tile -> (S, L, N).
+
+        This is Ji et al.'s (1604.04661) shared-negative batching lifted to
+        the tile granularity of `_kernel_tiled` (DESIGN.md §4): the tile's
+        output block shrinks from T·(N+1) rows to ~T+N, which is what makes
+        the tiled kernel's batched fetch ≥2× smaller per window. Each set is
+        distinct internally and from *all* T targets of its tile, so the
+        per-window invariant (negatives ≠ target, pairwise distinct) still
+        holds for every window and the tile scheduler never sees a
+        target-as-negative collision.
+        """
+        S, L = targets.shape
+        nt = -(-L // tile)
+        Lp = nt * tile
+        tg = np.full((S, Lp), -1, dtype=np.int64)
+        tg[:, :L] = targets
+        if lengths is not None:
+            tg[np.arange(Lp)[None, :] >= np.asarray(lengths)[:, None]] = -1
+        tg = tg.reshape(S, nt, tile)
+        negs = self.table.sample((S, nt, n_neg), self.rng).astype(np.int32)
+        for _ in range(16):
+            bad = self._tile_conflicts(tg, negs)
+            if not bad.any():
+                break
+            resampled = self.table.sample(negs.shape,
+                                          self.rng).astype(np.int32)
+            negs = np.where(bad, resampled, negs)
+        bad = self._tile_conflicts(tg, negs)
+        # deterministic fallback: each pass advances every conflicted slot,
+        # so `vocab` passes visit every id — if conflicts persist past that,
+        # some tile has fewer than n_neg non-target ids (infeasible config)
+        for _ in range(self.vocab):
+            if not bad.any():
+                break
+            negs = np.where(bad, (negs + 1) % self.vocab, negs)
+            bad = self._tile_conflicts(tg, negs)
+        if bad.any():
+            raise ValueError(
+                f"cannot draw {n_neg} negatives distinct from all targets "
+                f"of a {tile}-window tile with vocab={self.vocab}; reduce "
+                f"tile_windows or negatives, or grow the vocabulary")
+        out = np.repeat(negs[:, :, None, :], tile, axis=2).reshape(S, Lp,
+                                                                   n_neg)
+        return np.ascontiguousarray(out[:, :L])
+
+    @staticmethod
+    def _tile_conflicts(tile_targets: np.ndarray,
+                        negs: np.ndarray) -> np.ndarray:
+        """(S, nt, N) bool — negative equals any target of its tile or an
+        earlier negative of the same set."""
+        bad = (negs[..., None] == tile_targets[:, :, None, :]).any(-1)
+        n = negs.shape[-1]
+        for j in range(1, n):
+            dup = (negs[:, :, j:j + 1] == negs[:, :, :j]).any(-1)
+            bad[:, :, j] |= dup
+        return bad
+
     @staticmethod
     def _conflicts(targets: np.ndarray, negs: np.ndarray) -> np.ndarray:
         """(S, L, N) bool — negative equals target or an earlier negative in

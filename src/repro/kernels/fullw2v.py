@@ -15,6 +15,24 @@ The paper's two mechanisms, mapped to TPU (DESIGN.md §2):
   update is expressed as two tiny GEMMs over data already resident in VMEM —
   the MXU-native analogue of the paper's per-negative register loop.
 
+Three kernel variants share the window math (``_window_update``):
+
+* ``_kernel``            — one window per inner step, strict ordering.
+* ``_kernel_pipelined``  — same semantics; window t+1's output rows prefetch
+  while window t computes (§3.1 "interleaving memory and computation").
+* ``_kernel_tiled``      — T consecutive windows fused per inner step
+  (DESIGN.md §4): the ring grows to ``T + 2*W_f`` positions, the tile's
+  context rows are gathered into one ``(T*K, d)`` block, its output rows are
+  deduplicated host-side (`repro.data.batching.plan_tiles`) and fetched as
+  one batched multi-row DMA, and the update becomes two large MXU-shaped
+  GEMMs — amortizing MXU and DMA-setup latency over T windows. Tiles whose
+  output rows collide across windows run the exact sequential path
+  (``strict`` bit); collision-free tiles trade strict intra-tile ordering
+  for throughput (all T windows read pre-tile values — the HogBatch
+  relaxation of Ji et al. 1604.04661; quality impact measured by
+  ``benchmarks/bench_tile_sweep.py``). At T=1 the tiled kernel is
+  bit-identical to ``_kernel``.
+
 Grid = one step per sentence; the TPU grid is sequential per core, so strict
 context-window ordering (required for convergence, paper §3.1) holds by
 construction, and batch-level parallelism comes from data parallelism across
@@ -40,6 +58,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.configs.w2v import resolve_gemm_windows
+
 LANE = 128     # TPU lane width; embedding dim must be a multiple
 SUBLANE = 8    # f32 sublane tile
 
@@ -47,6 +67,164 @@ SUBLANE = 8    # f32 sublane tile
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
+
+def tiled_scratch_rows(tile: int, w_f: int, n_neg: int,
+                       gemm_windows: int = 0) -> dict:
+    """Padded scratch-row counts of `_kernel_tiled`, keyed like its scratch
+    operands (ring/ctx_tile/out_uniq/out_exp/ctx_win/out_win). Single source
+    of truth shared with `benchmarks/bench_tile_sweep` so VMEM reporting
+    stays in lockstep with the kernel."""
+    g = resolve_gemm_windows(tile, gemm_windows)
+    m = n_neg + 1
+    return {
+        "ring": _round_up(tile + 2 * w_f, SUBLANE),
+        "ctx_tile": _round_up(g * 2 * w_f, SUBLANE),
+        "out_uniq": _round_up(tile * m, SUBLANE),
+        "out_exp": _round_up(g * m, SUBLANE),
+        "ctx_win": _round_up(2 * w_f, SUBLANE),
+        "out_win": _round_up(m, SUBLANE),
+    }
+
+
+def _ctx_offsets(w_f: int) -> list:
+    """Window-relative context offsets [-w_f..w_f] \\ {0}."""
+    return [o for o in range(-w_f, w_f + 1) if o != 0]
+
+
+# ---------------------------------------------------------------------------
+# Shared building blocks (used by all three kernel variants)
+# ---------------------------------------------------------------------------
+
+def _window_update(ctx, out_rows, label, mask, lr):
+    """The SGNS window update (DESIGN.md §2) on VMEM-resident blocks.
+
+    ctx      : (K, d) f32 — gathered context rows (zeros where invalid)
+    out_rows : (M, d) f32 — target + negative rows
+    label    : (K, M) f32 — 1 where the pairing is (context, its target)
+    mask     : (K, M) bool — which pairings are real (window membership,
+               sentence edges, padding)
+    Returns (d_ctx (K, d), d_out (M, d)) gradient blocks.
+    """
+    # function-level import: repro.core.__init__ pulls in the trainer →
+    # ops → this module, so a top-level import would be circular
+    from repro.core.sgns import stable_sigmoid
+
+    corr = jax.lax.dot_general(
+        ctx, out_rows, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (K, M)
+    g = lr * (label - stable_sigmoid(corr))
+    g = jnp.where(mask, g, 0.0)
+    d_ctx = jax.lax.dot_general(
+        g, out_rows, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (K, d)
+    d_out = jax.lax.dot_general(
+        g, ctx, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (M, d)
+    return d_ctx, d_out
+
+
+def _zero_rows(blk, start: int, stop: int):
+    """Zero scratch rows [start, stop) (uninitialized VMEM may hold NaNs)."""
+    if stop > start:
+        blk[pl.ds(start, stop - start), :] = jnp.zeros(
+            (stop - start, blk.shape[-1]), blk.dtype)
+
+
+def _gather_window_ctx(ring, ctx_blk, t, dst0: int, *, w_f: int, r: int,
+                       length, L: int):
+    """Copy window t's context rows from the VMEM ring (no HBM traffic) into
+    ctx_blk rows [dst0, dst0 + 2*w_f); out-of-sentence positions read 0."""
+    for j, off in enumerate(_ctx_offsets(w_f)):
+        p = t + off
+        valid = jnp.logical_and(p >= 0, p < length)
+        slot = jnp.clip(p, 0, L - 1) % r
+        row = ring[pl.ds(slot, 1), :]
+        ctx_blk[pl.ds(dst0 + j, 1), :] = jnp.where(valid, row, 0.0)
+
+
+def _scatter_window_ctx(ring, d_ctx, t, src0: int, *, w_f: int, r: int,
+                        L: int):
+    """Accumulate window t's context deltas back into the ring. Invalid
+    positions carry zero gradient (masked in `_window_update`), so the
+    clipped-slot add is a no-op for them."""
+    for j, off in enumerate(_ctx_offsets(w_f)):
+        p = t + off
+        slot = jnp.clip(p, 0, L - 1) % r
+        ring[pl.ds(slot, 1), :] = (ring[pl.ds(slot, 1), :]
+                                   + d_ctx[src0 + j:src0 + j + 1, :])
+
+
+def _ctx_valid(t, k_pad: int, *, w_f: int, length):
+    """(k_pad,) bool — which context slots of window t are real words.
+    Rebuilds the static offset list with iota (no captured constants):
+    j < w_f -> j - w_f;  j >= w_f -> j - w_f + 1 (skipping offset 0)."""
+    ji = jax.lax.iota(jnp.int32, k_pad)
+    offs_arr = jnp.where(ji < w_f, ji - w_f, ji - w_f + 1)
+    p_arr = t + offs_arr
+    valid = jnp.logical_and(p_arr >= 0, p_arr < length)
+    return jnp.logical_and(valid, ji < 2 * w_f)
+
+
+def _window_label_mask(t, k_pad: int, m_pad: int, *, w_f: int, n_neg: int,
+                       length):
+    """Label + validity mask for a single window's (k_pad, m_pad) update."""
+    label = (jax.lax.broadcasted_iota(jnp.int32, (k_pad, m_pad), 1)
+             == 0).astype(jnp.float32)
+    out_valid = jax.lax.iota(jnp.int32, m_pad) < n_neg + 1
+    mask = jnp.logical_and(
+        _ctx_valid(t, k_pad, w_f=w_f, length=length)[:, None],
+        out_valid[None, :])
+    return label, mask
+
+
+def _seq_window(t, tokens_ref, negs_ref, w_out_out, ring, ctx_blk, out_blk,
+                sem, *, w_f: int, n_neg: int, r: int, length, L: int, lr):
+    """One strictly-ordered window update (fetch → GEMMs → apply → write
+    back). Shared by `_kernel` and `_kernel_tiled`'s strict fallback; `r` is
+    the caller's ring size (2*w_f+1 sequential, T+2*w_f tiled)."""
+    k = 2 * w_f
+    m = n_neg + 1
+    k_pad = ctx_blk.shape[0]
+    m_pad = out_blk.shape[0]
+
+    def copy(src, dst):
+        cp = pltpu.make_async_copy(src, dst, sem)
+        cp.start()
+        cp.wait()
+
+    # ---- gather context rows (from VMEM ring — no HBM traffic) ----
+    _gather_window_ctx(ring, ctx_blk, t, 0, w_f=w_f, r=r, length=length, L=L)
+    _zero_rows(ctx_blk, k, k_pad)
+
+    # ---- fetch output rows: target + shared negatives (paper §3.1) ----
+    tgt = tokens_ref[0, t]
+    copy(w_out_out.at[pl.ds(tgt, 1)], out_blk.at[pl.ds(0, 1)])
+    for j in range(n_neg):
+        neg = negs_ref[0, t, j]
+        copy(w_out_out.at[pl.ds(neg, 1)], out_blk.at[pl.ds(1 + j, 1)])
+    _zero_rows(out_blk, m, m_pad)
+
+    # ---- the window update: two tiny GEMMs on VMEM-resident data ----
+    ctx = ctx_blk[...]
+    out_rows = out_blk[...]
+    label, mask = _window_label_mask(t, k_pad, m_pad, w_f=w_f, n_neg=n_neg,
+                                     length=length)
+    d_ctx, d_out = _window_update(ctx, out_rows, label, mask, lr)
+
+    # ---- apply: context deltas accumulate in the ring buffer ----
+    _scatter_window_ctx(ring, d_ctx, t, 0, w_f=w_f, r=r, L=L)
+
+    # ---- output rows: update in VMEM, write back once per window ----
+    out_blk[...] = out_rows + d_out
+    copy(out_blk.at[pl.ds(0, 1)], w_out_out.at[pl.ds(tgt, 1)])
+    for j in range(n_neg):
+        neg = negs_ref[0, t, j]
+        copy(out_blk.at[pl.ds(1 + j, 1)], w_out_out.at[pl.ds(neg, 1)])
+
+
+# ---------------------------------------------------------------------------
+# Variant 1: sequential (one window per step)
+# ---------------------------------------------------------------------------
 
 def _kernel(
     # --- scalar/SMEM inputs (per sentence block) ---
@@ -71,12 +249,7 @@ def _kernel(
 ):
     """See module docstring; `_kernel_pipelined` adds §3.1-style prefetch."""
     L = tokens_ref.shape[1]
-    d = w_in_hbm.shape[1]
     r = 2 * w_f + 1
-    k = 2 * w_f                      # context slots per window
-    m = n_neg + 1                    # output rows per window
-    k_pad = ctx_blk.shape[0]
-    m_pad = out_blk.shape[0]
     length = length_ref[0]
     lr = lr_ref[0]
 
@@ -116,75 +289,9 @@ def _kernel(
                 store_ring(q - r)
             load_ring(q)
 
-        # ---- gather context rows (from VMEM ring — no HBM traffic) ----
-        offs = [o for o in range(-w_f, w_f + 1) if o != 0]
-        for j, off in enumerate(offs):
-            p = t + off
-            valid = jnp.logical_and(p >= 0, p < length)
-            slot = jnp.clip(p, 0, L - 1) % r
-            row = ring[pl.ds(slot, 1), :]
-            ctx_blk[pl.ds(j, 1), :] = jnp.where(valid, row, 0.0)
-        if k_pad > k:
-            ctx_blk[pl.ds(k, k_pad - k), :] = jnp.zeros((k_pad - k, d),
-                                                        ctx_blk.dtype)
-
-        # ---- fetch output rows: target + shared negatives (paper §3.1) ----
-        tgt = tokens_ref[0, t]
-        copy(w_out_out.at[pl.ds(tgt, 1)], out_blk.at[pl.ds(0, 1)])
-        for j in range(n_neg):
-            neg = negs_ref[0, t, j]
-            copy(w_out_out.at[pl.ds(neg, 1)], out_blk.at[pl.ds(1 + j, 1)])
-        if m_pad > m:
-            out_blk[pl.ds(m, m_pad - m), :] = jnp.zeros((m_pad - m, d),
-                                                        out_blk.dtype)
-
-        # ---- the window update: two tiny GEMMs on VMEM-resident data ----
-        ctx = ctx_blk[...]                         # (k_pad, d)
-        out_rows = out_blk[...]                    # (m_pad, d)
-        corr = jax.lax.dot_general(
-            ctx, out_rows, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)    # (k_pad, m_pad)
-        # stable sigmoid, same formula as core.sgns.stable_sigmoid
-        f = jnp.where(corr >= 0,
-                      1.0 / (1.0 + jnp.exp(-corr)),
-                      jnp.exp(corr) / (1.0 + jnp.exp(corr)))
-        label = (jax.lax.broadcasted_iota(jnp.int32, (k_pad, m_pad), 1)
-                 == 0).astype(jnp.float32)
-        g = lr * (label - f)
-        # mask invalid context rows and padded output columns
-        # rebuild the static offset list with iota (no captured constants):
-        # j < w_f -> j - w_f;  j >= w_f -> j - w_f + 1 (skipping offset 0)
-        ji = jax.lax.iota(jnp.int32, k_pad)
-        offs_arr = jnp.where(ji < w_f, ji - w_f, ji - w_f + 1)
-        p_arr = t + offs_arr
-        ctx_valid = jnp.logical_and(p_arr >= 0, p_arr < length)
-        ctx_valid = jnp.logical_and(
-            ctx_valid,
-            jax.lax.iota(jnp.int32, k_pad) < k)
-        out_valid = jax.lax.iota(jnp.int32, m_pad) < m
-        g = jnp.where(ctx_valid[:, None], g, 0.0)
-        g = jnp.where(out_valid[None, :], g, 0.0)
-
-        d_ctx = jax.lax.dot_general(
-            g, out_rows, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)    # (k_pad, d)
-        d_out = jax.lax.dot_general(
-            g, ctx, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)    # (m_pad, d)
-
-        # ---- apply: context deltas accumulate in the ring buffer ----
-        for j, off in enumerate(offs):
-            p = t + off
-            slot = jnp.clip(p, 0, L - 1) % r
-            ring[pl.ds(slot, 1), :] = (ring[pl.ds(slot, 1), :]
-                                       + d_ctx[j:j + 1, :])
-
-        # ---- output rows: update in VMEM, write back once per window ----
-        out_blk[...] = out_rows + d_out
-        copy(out_blk.at[pl.ds(0, 1)], w_out_out.at[pl.ds(tgt, 1)])
-        for j in range(n_neg):
-            neg = negs_ref[0, t, j]
-            copy(out_blk.at[pl.ds(1 + j, 1)], w_out_out.at[pl.ds(neg, 1)])
+        _seq_window(t, tokens_ref, negs_ref, w_out_out, ring, ctx_blk,
+                    out_blk, sem, w_f=w_f, n_neg=n_neg, r=r, length=length,
+                    L=L, lr=lr)
         return 0
 
     def guarded_step(t, c):
@@ -206,6 +313,10 @@ def _kernel(
 
     jax.lax.fori_loop(0, r, flush, 0, unroll=True)
 
+
+# ---------------------------------------------------------------------------
+# Variant 2: pipelined (prefetch window t+1's rows while t computes)
+# ---------------------------------------------------------------------------
 
 def _kernel_pipelined(
     tokens_ref, negs_ref, length_ref, lr_ref,
@@ -326,50 +437,17 @@ def _kernel_pipelined(
         def _():
             start_prefetch(t + 1, 1 - buf)
 
-        # ---- gather context rows ----
-        offs = [o for o in range(-w_f, w_f + 1) if o != 0]
-        for j, off in enumerate(offs):
-            p = t + off
-            valid = jnp.logical_and(p >= 0, p < length)
-            slot = jnp.clip(p, 0, L - 1) % r
-            row = ring[pl.ds(slot, 1), :]
-            ctx_blk[pl.ds(j, 1), :] = jnp.where(valid, row, 0.0)
-        if k_pad > k:
-            ctx_blk[pl.ds(k, k_pad - k), :] = jnp.zeros((k_pad - k, d),
-                                                        ctx_blk.dtype)
-
-        # ---- window GEMMs (same math as the sequential kernel) ----
+        # ---- gather context + window GEMMs (shared helpers) ----
+        _gather_window_ctx(ring, ctx_blk, t, 0, w_f=w_f, r=r, length=length,
+                           L=L)
+        _zero_rows(ctx_blk, k, k_pad)
         ctx = ctx_blk[...]
         out_rows = out_dbl[buf]
-        corr = jax.lax.dot_general(
-            ctx, out_rows, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        f = jnp.where(corr >= 0, 1.0 / (1.0 + jnp.exp(-corr)),
-                      jnp.exp(corr) / (1.0 + jnp.exp(corr)))
-        label = (jax.lax.broadcasted_iota(jnp.int32, (k_pad, m_pad), 1)
-                 == 0).astype(jnp.float32)
-        g = lr * (label - f)
-        ji = jax.lax.iota(jnp.int32, k_pad)
-        offs_arr = jnp.where(ji < w_f, ji - w_f, ji - w_f + 1)
-        p_arr = t + offs_arr
-        ctx_valid = jnp.logical_and(p_arr >= 0, p_arr < length)
-        ctx_valid = jnp.logical_and(ctx_valid,
-                                    jax.lax.iota(jnp.int32, k_pad) < k)
-        out_valid = jax.lax.iota(jnp.int32, m_pad) < m
-        g = jnp.where(ctx_valid[:, None], g, 0.0)
-        g = jnp.where(out_valid[None, :], g, 0.0)
-        d_ctx = jax.lax.dot_general(
-            g, out_rows, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        d_out = jax.lax.dot_general(
-            g, ctx, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        label, mask = _window_label_mask(t, k_pad, m_pad, w_f=w_f,
+                                         n_neg=n_neg, length=length)
+        d_ctx, d_out = _window_update(ctx, out_rows, label, mask, lr)
 
-        for j, off in enumerate(offs):
-            p = t + off
-            slot = jnp.clip(p, 0, L - 1) % r
-            ring[pl.ds(slot, 1), :] = (ring[pl.ds(slot, 1), :]
-                                       + d_ctx[j:j + 1, :])
+        _scatter_window_ctx(ring, d_ctx, t, 0, w_f=w_f, r=r, L=L)
 
         out_dbl[buf] = out_rows + d_out
         for j in range(m):
@@ -396,6 +474,268 @@ def _kernel_pipelined(
 
     jax.lax.fori_loop(0, r, flush, 0, unroll=True)
 
+
+# ---------------------------------------------------------------------------
+# Variant 3: tiled (T windows fused per step, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def _kernel_tiled(
+    # --- scalar/SMEM inputs (per sentence block) ---
+    tokens_ref,    # (1, L) int32 SMEM
+    negs_ref,      # (1, L, N) int32 SMEM
+    length_ref,    # (1,) int32 SMEM
+    lr_ref,        # (1,) f32 SMEM
+    uniq_ref,      # (1, nt, T*m) int32 SMEM — compacted unique output rows
+    scat_ref,      # (1, nt, T*m) int32 SMEM — slot -> uniq column
+    ucount_ref,    # (1, nt) int32 SMEM — valid uniq columns per tile
+    strict_ref,    # (1, nt) int32 SMEM — 1: sequential fallback tile
+    # --- HBM (ANY) inputs, aliased to outputs ---
+    w_in_hbm, w_out_hbm,
+    # --- outputs (aliased) ---
+    w_in_out, w_out_out,
+    # --- scratch ---
+    ring,          # (Rt_pad, d) f32 VMEM — T + 2*w_f position ring
+    ctx_tile,      # (GK_pad, d) f32 VMEM — one GEMM group's context rows
+    out_uniq,      # (U_pad, d) f32 VMEM — deduplicated output rows
+    out_exp,       # (GM_pad, d) f32 VMEM — scatter-expanded group rows
+    ctx_win,       # (k_pad, d) f32 VMEM — strict-fallback window context
+    out_win,       # (m_pad, d) f32 VMEM — strict-fallback window rows
+    sem,           # DMA semaphore
+    *,
+    w_f: int,
+    n_neg: int,
+    tile: int,
+    gemm_windows: int,
+):
+    """T consecutive windows per step. Collision-free tiles (host `strict`
+    bit clear) fetch the tile's deduplicated output rows as one batched DMA,
+    then update in GEMM groups of ``G = gemm_windows`` windows: each group
+    runs two (G*K, G*m, d) MXU-shaped GEMMs and applies its deltas to the
+    VMEM ring and out_uniq block before the next group reads them — so DMA
+    amortizes over the whole tile while value staleness is bounded by G
+    (DESIGN.md §4). Strict tiles replay the exact sequential path."""
+    L = tokens_ref.shape[1]
+    nt = uniq_ref.shape[1]
+    rt = tile + 2 * w_f            # ring positions covering the whole tile
+    k = 2 * w_f
+    m = n_neg + 1
+    M = tile * m                   # output slots per tile
+    G = gemm_windows
+    gk_pad = ctx_tile.shape[0]
+    gm_pad = out_exp.shape[0]
+    u_pad = out_uniq.shape[0]
+    k_pad = ctx_win.shape[0]
+    m_pad = out_win.shape[0]
+    length = length_ref[0]
+    lr = lr_ref[0]
+
+    def copy(src, dst):
+        cp = pltpu.make_async_copy(src, dst, sem)
+        cp.start()
+        cp.wait()
+
+    def load_ring(q):
+        tok = tokens_ref[0, q]
+        copy(w_in_out.at[pl.ds(tok, 1)], ring.at[pl.ds(q % rt, 1)])
+
+    def store_ring(p):
+        tok = tokens_ref[0, p]
+        copy(ring.at[pl.ds(p % rt, 1)], w_in_out.at[pl.ds(tok, 1)])
+
+    # --- preload positions 0..w_f-1 ---
+    def preload(q, _):
+        @pl.when(q < length)
+        def _():
+            load_ring(q)
+        return 0
+
+    jax.lax.fori_loop(0, min(w_f, L), preload, 0, unroll=True)
+
+    def advance_window(t):
+        """Seed-kernel ring advance for window t: store the r-distance
+        evictee (its updates are complete), then load the leading edge.
+        The *slot* modulus is rt (big ring: rows stay resident for context
+        reads across the tile) but the *store schedule* is the sequential
+        kernel's r-distance one. Strict tiles call this per window, so
+        their loads see HBM exactly as fresh as under `_kernel`; in fused
+        tiles only group window 0 goes through here — the remaining G-1
+        loads run ahead of their evictees' stores, which widens the seed
+        kernel's benign duplicate-token race from distance < r to
+        < r + G - 1 (DESIGN.md §4)."""
+        q = t + w_f
+
+        @pl.when(q < length)
+        def _():
+            @pl.when(q - r_seq >= 0)
+            def _():
+                store_ring(q - r_seq)
+            load_ring(q)
+
+    r_seq = 2 * w_f + 1            # sequential store distance
+
+    def tile_step(i, _):
+        t0 = i * tile
+        strict = strict_ref[0, i] != 0
+
+        # ---- strict fallback: bit-identical sequential replay (the ring
+        # advance interleaves per window exactly as `_kernel`) ----
+        @pl.when(strict)
+        def _():
+            for w in range(tile):
+                t = t0 + w
+
+                @pl.when(t < length)
+                def _():
+                    advance_window(t)
+                    _seq_window(t, tokens_ref, negs_ref, w_out_out, ring,
+                                ctx_win, out_win, sem, w_f=w_f, n_neg=n_neg,
+                                r=rt, length=length, L=L, lr=lr)
+
+        # ---- fused path: one batched fetch per tile + per-group GEMMs ----
+        @pl.when(~strict)
+        def _():
+            # batched multi-row fetch of the deduplicated output rows:
+            # issue every start, then wait — one DMA-latency exposure per
+            # tile instead of one per row (paper §3.1 amortization)
+            u = ucount_ref[0, i]
+            for c in range(M):
+                @pl.when(c < u)
+                def _():
+                    pltpu.make_async_copy(
+                        w_out_out.at[pl.ds(uniq_ref[0, i, c], 1)],
+                        out_uniq.at[pl.ds(c, 1)], sem).start()
+
+                @pl.when(~(c < u))
+                def _():
+                    out_uniq[pl.ds(c, 1), :] = jnp.zeros(
+                        (1, out_uniq.shape[1]), out_uniq.dtype)
+            for c in range(M):
+                @pl.when(c < u)
+                def _():
+                    pltpu.make_async_copy(
+                        w_out_out.at[pl.ds(uniq_ref[0, i, c], 1)],
+                        out_uniq.at[pl.ds(c, 1)], sem).wait()
+            _zero_rows(out_uniq, M, u_pad)
+
+            # GEMM groups of G windows: deltas land in the VMEM ring /
+            # out_uniq between groups, bounding staleness to G windows
+            # while the HBM traffic stays once-per-tile
+            def fused_group(base, w0, wn):
+                # gather the group's context rows from the (fresh) ring
+                for w in range(wn):
+                    _gather_window_ctx(ring, ctx_tile, base + w, w * k,
+                                       w_f=w_f, r=rt, length=length, L=L)
+                _zero_rows(ctx_tile, wn * k, gk_pad)
+
+                # expand the group's slots from the (fresh) compacted rows
+                for sj in range(wn * m):
+                    col = scat_ref[0, i, w0 * m + sj]
+                    out_exp[pl.ds(sj, 1), :] = out_uniq[pl.ds(col, 1), :]
+                _zero_rows(out_exp, wn * m, gm_pad)
+
+                # two MXU-shaped GEMMs with a block-diagonal mask (window
+                # w's context rows pair only with window w's slots)
+                ri = jax.lax.iota(jnp.int32, gk_pad)
+                jr = jax.lax.rem(ri, k)
+                win_r = jax.lax.div(ri, k)
+                offs_arr = jnp.where(jr < w_f, jr - w_f, jr - w_f + 1)
+                p_arr = base + win_r + offs_arr
+                row_valid = ((p_arr >= 0) & (p_arr < length)
+                             & (base + win_r < length) & (ri < wn * k))
+                ci = jax.lax.iota(jnp.int32, gm_pad)
+                win_c = jax.lax.div(ci, m)
+                col_valid = (base + win_c < length) & (ci < wn * m)
+                label = (jax.lax.rem(ci, m) == 0).astype(jnp.float32)
+                label = jnp.broadcast_to(label[None, :], (gk_pad, gm_pad))
+                mask = (row_valid[:, None] & col_valid[None, :]
+                        & (win_r[:, None] == win_c[None, :]))
+
+                d_ctx, d_out = _window_update(ctx_tile[...], out_exp[...],
+                                              label, mask, lr)
+
+                # apply context deltas (repeats accumulate in slot order)
+                for w in range(wn):
+                    _scatter_window_ctx(ring, d_ctx, base + w, w * k,
+                                        w_f=w_f, r=rt, L=L)
+
+                # compact output deltas through the scatter map (invalid
+                # slots carry zero gradient)
+                for sj in range(wn * m):
+                    col = scat_ref[0, i, w0 * m + sj]
+                    out_uniq[pl.ds(col, 1), :] = (
+                        out_uniq[pl.ds(col, 1), :] + d_out[sj:sj + 1, :])
+
+            for b in range((tile + G - 1) // G):
+                w0 = b * G
+                wn = min(G, tile - w0)         # windows in this group
+                base = t0 + w0
+
+                @pl.when(base < length)
+                def _(base=base, w0=w0, wn=wn):
+                    # ring advance for the group: window 0 follows the exact
+                    # sequential store-then-load order (its evictee is
+                    # complete); the remaining loads batch up front and
+                    # their evictees are stored after the GEMM below, once
+                    # this group's context updates have landed
+                    advance_window(base)
+                    for w in range(1, wn):
+                        q = base + w + w_f
+
+                        @pl.when(q < length)
+                        def _(q=q):
+                            load_ring(q)
+
+                    fused_group(base, w0, wn)
+
+                    for w in range(1, wn):
+                        q = base + w + w_f
+                        p = q - r_seq
+
+                        @pl.when(jnp.logical_and(q < length, p >= 0))
+                        def _(p=p):
+                            store_ring(p)
+
+            # write each unique row back once per tile
+            for c in range(M):
+                @pl.when(c < u)
+                def _():
+                    pltpu.make_async_copy(
+                        out_uniq.at[pl.ds(c, 1)],
+                        w_out_out.at[pl.ds(uniq_ref[0, i, c], 1)],
+                        sem).start()
+            for c in range(M):
+                @pl.when(c < u)
+                def _():
+                    pltpu.make_async_copy(
+                        out_uniq.at[pl.ds(c, 1)],
+                        w_out_out.at[pl.ds(uniq_ref[0, i, c], 1)],
+                        sem).wait()
+        return 0
+
+    def guarded_tile(i, c):
+        @pl.when(i * tile < length)
+        def _():
+            tile_step(i, c)
+        return 0
+
+    jax.lax.fori_loop(0, nt, guarded_tile, 0)
+
+    # --- flush surviving ring entries (increasing position order); the
+    # r-distance store schedule leaves the same survivors as `_kernel` ---
+    def flush(kk, _):
+        p = length - r_seq + kk
+
+        @pl.when(jnp.logical_and(p >= 0, p < length))
+        def _():
+            store_ring(p)
+        return 0
+
+    jax.lax.fori_loop(0, r_seq, flush, 0, unroll=True)
+
+
+# ---------------------------------------------------------------------------
+# Host-side entry points
+# ---------------------------------------------------------------------------
 
 def fullw2v_pallas(
     w_in: jax.Array,     # (V, d) f32
@@ -464,4 +804,91 @@ def fullw2v_pallas(
         input_output_aliases={4: 0, 5: 1},
         interpret=interpret,
     )(tokens, negs, lengths, lr_arr, w_in, w_out)
+    return out[0], out[1]
+
+
+def fullw2v_pallas_tiled(
+    w_in: jax.Array,     # (V, d) f32
+    w_out: jax.Array,    # (V, d) f32
+    tokens: jax.Array,   # (S, L) int32
+    negs: jax.Array,     # (S, L, N) int32
+    lengths: jax.Array,  # (S,) int32
+    lr: jax.Array,       # scalar f32
+    w_f: int,
+    tile: int,
+    uniq: jax.Array,     # (S, nt, T*(N+1)) int32 — from plan_tiles
+    scatter: jax.Array,  # (S, nt, T*(N+1)) int32
+    ucount: jax.Array,   # (S, nt) int32
+    strict: jax.Array,   # (S, nt) int32
+    gemm_windows: int = 0,   # windows per GEMM group; 0 -> min(tile, 4)
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Window-tile batched FULL-W2V pass (DESIGN.md §4). The tile schedule
+    must come from `repro.data.batching.plan_tiles(tokens, negs, lengths,
+    tile)` for the same batch. ``gemm_windows`` bounds intra-tile value
+    staleness: output/context deltas are applied in VMEM between GEMM
+    groups, so only ~G windows ever read stale values while HBM traffic
+    stays once-per-tile."""
+    S, L = tokens.shape
+    n_neg = negs.shape[-1]
+    V, d = w_in.shape
+    assert d % LANE == 0, f"embedding dim {d} must be a multiple of {LANE}"
+    assert tile >= 1
+    G = resolve_gemm_windows(tile, gemm_windows)
+    m = n_neg + 1
+    nt = uniq.shape[1]
+    M = tile * m
+    assert uniq.shape == (S, nt, M), (uniq.shape, (S, nt, M))
+    assert scatter.shape == (S, nt, M)
+    assert nt == -(-L // tile)
+    dims = tiled_scratch_rows(tile, w_f, n_neg, G)
+
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape((1,))
+
+    kernel = functools.partial(_kernel_tiled, w_f=w_f, n_neg=n_neg,
+                               tile=tile, gemm_windows=G)
+    scratch = [
+        pltpu.VMEM((dims["ring"], d), jnp.float32),
+        pltpu.VMEM((dims["ctx_tile"], d), jnp.float32),  # one GEMM group
+        pltpu.VMEM((dims["out_uniq"], d), jnp.float32),
+        pltpu.VMEM((dims["out_exp"], d), jnp.float32),   # one GEMM group
+        pltpu.VMEM((dims["ctx_win"], d), jnp.float32),   # strict path
+        pltpu.VMEM((dims["out_win"], d), jnp.float32),   # strict path
+        pltpu.SemaphoreType.DMA,
+    ]
+    out = pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda s: (s, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, L, n_neg), lambda s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda s: (s,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, nt, M), lambda s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, nt, M), lambda s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, nt), lambda s: (s, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, nt), lambda s: (s, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((V, d), w_in.dtype),
+            jax.ShapeDtypeStruct((V, d), w_out.dtype),
+        ],
+        scratch_shapes=scratch,
+        input_output_aliases={8: 0, 9: 1},
+        interpret=interpret,
+    )(tokens, negs, lengths, lr_arr, uniq, scatter, ucount, strict,
+      w_in, w_out)
     return out[0], out[1]

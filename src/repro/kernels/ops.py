@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.fullw2v import fullw2v_pallas
+from repro.kernels.fullw2v import fullw2v_pallas, fullw2v_pallas_tiled
 
 
 def _on_tpu() -> bool:
@@ -53,3 +53,74 @@ def sgns_batch_update(
         return _ref.batch_sgns_ref(w_in, w_out, tokens, negs, lengths,
                                    jnp.asarray(lr, jnp.float32), w_f)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w_f", "tile", "backend",
+                                    "gemm_windows"),
+                   donate_argnums=(0, 1))
+def sgns_batch_update_tiled(
+    w_in: jax.Array,      # (V, d) f32 — donated
+    w_out: jax.Array,     # (V, d) f32 — donated
+    tokens: jax.Array,    # (S, L) int32
+    negs: jax.Array,      # (S, L, N) int32
+    lengths: jax.Array,   # (S,) int32
+    lr: jax.Array,        # scalar f32
+    w_f: int,
+    tile: int,
+    uniq: jax.Array,      # (S, nt, T*(N+1)) int32 — plan_tiles output
+    scatter: jax.Array,   # (S, nt, T*(N+1)) int32
+    ucount: jax.Array,    # (S, nt) int32
+    strict: jax.Array,    # (S, nt) int32
+    backend: str = "auto",   # auto | pallas_tiled | pallas_tiled_interpret
+                             # | jnp_tiled
+    gemm_windows: int = 0,   # windows per GEMM group; 0 -> min(tile, 4)
+) -> Tuple[jax.Array, jax.Array]:
+    """Train one batch with T windows fused per kernel step (DESIGN.md §4).
+
+    The tile schedule (uniq/scatter/ucount/strict) must come from
+    ``repro.data.batching.plan_tiles`` for this exact batch; the host side
+    owns conflict detection, exactly as the paper assigns negative
+    preparation to the CPU. At ``tile=1`` every backend is bit-identical to
+    the sequential path. ``gemm_windows`` bounds intra-tile staleness (see
+    `fullw2v.fullw2v_pallas_tiled`).
+    """
+    lr = jnp.asarray(lr, jnp.float32)
+    if backend == "auto":
+        backend = "pallas_tiled" if _on_tpu() else "jnp_tiled"
+    if backend == "pallas_tiled":
+        return fullw2v_pallas_tiled(w_in, w_out, tokens, negs, lengths, lr,
+                                    w_f, tile, uniq, scatter, ucount, strict,
+                                    gemm_windows=gemm_windows)
+    if backend == "pallas_tiled_interpret":
+        return fullw2v_pallas_tiled(w_in, w_out, tokens, negs, lengths, lr,
+                                    w_f, tile, uniq, scatter, ucount, strict,
+                                    gemm_windows=gemm_windows,
+                                    interpret=True)
+    if backend == "jnp_tiled":
+        return _ref.batch_sgns_tiled_ref(w_in, w_out, tokens, negs, lengths,
+                                         lr, w_f, tile, uniq, scatter,
+                                         ucount, strict,
+                                         gemm_windows=gemm_windows)
+    raise ValueError(f"unknown tiled backend {backend!r}")
+
+
+_TILED_BACKEND = {
+    # sequential backend name -> tiled equivalent (trainer dispatch)
+    "auto": "auto",
+    "pallas": "pallas_tiled",
+    "pallas_pipelined": "pallas_tiled",
+    "pallas_interpret": "pallas_tiled_interpret",
+    "jnp": "jnp_tiled",
+    "pallas_tiled": "pallas_tiled",
+    "pallas_tiled_interpret": "pallas_tiled_interpret",
+    "jnp_tiled": "jnp_tiled",
+}
+
+
+def tiled_backend(backend: str) -> str:
+    """Map a sequential backend name to its tiled counterpart."""
+    try:
+        return _TILED_BACKEND[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}") from None

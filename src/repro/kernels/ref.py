@@ -12,6 +12,13 @@ The Pallas kernel (`fullw2v.py`) must match this to float tolerance; the
 property tests additionally check this oracle against a direct
 no-ring-buffer recomputation (`repro.core.baselines.matrix_sgns`) on the
 quantities where they must agree.
+
+`batch_sgns_tiled_ref` mirrors the *tiled* kernel (`_kernel_tiled`,
+DESIGN.md §4): T windows per step over a ``T + 2*W_f`` ring, fused
+pre-tile-value updates for collision-free tiles, sequential replay for
+``strict`` tiles. It consumes the same host schedule
+(`repro.data.batching.plan_tiles`) as the kernel, so interpret-mode tests
+can diff the two implementations directly.
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.sgns import window_delta
+from repro.core.sgns import stable_sigmoid, window_delta
 
 
 @functools.partial(jax.jit, static_argnames=("w_f",), donate_argnums=(0, 1))
@@ -121,4 +128,198 @@ def batch_sgns_ref(
 
     (w_in, w_out), _ = jax.lax.scan(body, (w_in, w_out),
                                     (tokens, negs, lengths))
+    return w_in, w_out
+
+
+# ---------------------------------------------------------------------------
+# Tiled oracle (mirrors `_kernel_tiled`, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def _sentence_sgns_tiled(w_in, w_out, tokens, negs, length, lr,
+                         uniq, scatter, ucount, strict,
+                         *, w_f: int, tile: int, gemm_windows: int):
+    """One sentence of the tiled schedule. Shapes: tokens (L,), negs (L, N),
+    uniq/scatter (nt, T*(N+1)), ucount/strict (nt,)."""
+    G = gemm_windows
+    L, N = negs.shape
+    V, d = w_in.shape
+    m = N + 1
+    k = 2 * w_f
+    rt = tile + 2 * w_f
+    nt = uniq.shape[0]
+    M = tile * m
+    offsets = jnp.array([o for o in range(-w_f, w_f + 1) if o != 0],
+                        dtype=jnp.int32)                      # (k,)
+
+    buf = jnp.zeros((rt, d), w_in.dtype)
+    r_seq = 2 * w_f + 1            # sequential store distance
+
+    # --- preload positions 0..w_f-1 ---
+    def preload(q, carry):
+        w_in, buf = carry
+        valid = q < length
+        tok = tokens[jnp.clip(q, 0, L - 1)]
+        row = jnp.where(valid, w_in[tok], buf[q % rt])
+        buf = buf.at[q % rt].set(row)
+        return (w_in, buf)
+
+    w_in, buf = jax.lax.fori_loop(0, min(w_f, L), preload, (w_in, buf))
+
+    # ring advance pieces — slot modulus rt (rows stay resident for the
+    # whole tile) but the *store schedule* is the sequential kernel's
+    # (store the r-distance evictee once its windows are complete)
+    def _store(t, act, w_in, buf):
+        q = t + w_f
+        old = q - r_seq
+        do_store = act & (q < length) & (old >= 0)
+        old_c = jnp.clip(old, 0, L - 1)
+        store_idx = tokens[old_c]
+        store_val = jnp.where(do_store, buf[old_c % rt], w_in[store_idx])
+        return w_in.at[store_idx].set(store_val)
+
+    def _load(t, act, w_in, buf):
+        q = t + w_f
+        do_load = act & (q < length)
+        q_c = jnp.clip(q, 0, L - 1)
+        load_row = jnp.where(do_load, w_in[tokens[q_c]], buf[q_c % rt])
+        return buf.at[q_c % rt].set(load_row)
+
+    def tile_step(i, carry):
+        w_in, w_out, buf = carry
+        t0 = i * tile
+        active = t0 < length
+
+        def strict_tile(carry):
+            """Bit-exact sequential replay (same math and ring advance
+            order as `sentence_sgns_ref`)."""
+            w_in, w_out, buf = carry
+            for w in range(tile):
+                t = t0 + w
+                act = active & (t < length)
+                w_in = _store(t, act, w_in, buf)
+                buf = _load(t, act, w_in, buf)
+                t_c = jnp.clip(t, 0, L - 1)
+                p = t + offsets
+                mask = act & (p >= 0) & (p < length)
+                slots = jnp.mod(jnp.clip(p, 0, L - 1), rt)
+                ctx = buf[slots]
+                out_idx = jnp.concatenate([tokens[t_c][None], negs[t_c]])
+                out_rows = w_out[out_idx]
+                d_ctx, d_out = window_delta(ctx, out_rows, mask, lr)
+                buf = buf.at[slots].add(d_ctx)
+                w_out = w_out.at[out_idx].add(jnp.where(act, d_out, 0.0))
+            return (w_in, w_out, buf)
+
+        def fused_tile(carry):
+            """GEMM groups of G windows over the tile's deduplicated rows:
+            the rows are read/written to the table once per tile, while
+            deltas become visible between groups (mirrors `_kernel_tiled`'s
+            bounded-staleness fused path)."""
+            w_in, w_out, buf = carry
+            u_vals = w_out[uniq[i]]                            # (M, d)
+            u_orig = u_vals
+
+            for b in range((tile + G - 1) // G):
+                w0 = b * G
+                wn = min(G, tile - w0)
+                base = t0 + w0
+                g_act = active & (base < length)
+                # group ring advance: window 0 store-then-load (sequential
+                # order), remaining windows load-only here / store after
+                # the GEMM once their context updates have landed
+                w_in = _store(base, g_act, w_in, buf)
+                for w in range(wn):
+                    buf = _load(base + w, g_act, w_in, buf)
+                centers = base + jnp.arange(wn, dtype=jnp.int32)
+                p = centers[:, None] + offsets[None, :]        # (wn, k)
+                p_flat = p.reshape(-1)
+                p_ok = (p_flat >= 0) & (p_flat < length)
+                slots = jnp.mod(jnp.clip(p_flat, 0, L - 1), rt)
+                ctx = jnp.where(p_ok[:, None], buf[slots], 0.0)
+
+                sc = jax.lax.dynamic_slice_in_dim(scatter[i], w0 * m,
+                                                  wn * m)
+                exp = u_vals[sc]                               # (wn*m, d)
+
+                win_r = jnp.arange(wn * k, dtype=jnp.int32) // k
+                win_c = jnp.arange(wn * m, dtype=jnp.int32) // m
+                row_valid = active & p_ok & (base + win_r < length)
+                col_valid = active & (base + win_c < length)
+                label = (jnp.arange(wn * m, dtype=jnp.int32) % m
+                         == 0).astype(ctx.dtype)
+                mask = (row_valid[:, None] & col_valid[None, :]
+                        & (win_r[:, None] == win_c[None, :]))
+
+                corr = ctx @ exp.T                             # (wn*k, wn*m)
+                g = lr * (label[None, :] - stable_sigmoid(corr))
+                g = jnp.where(mask, g, 0.0)
+                d_ctx = g @ exp                                # (wn*k, d)
+                d_out = g.T @ ctx                              # (wn*m, d)
+
+                buf = buf.at[slots].add(d_ctx)   # repeats accumulate
+                u_vals = u_vals.at[sc].add(d_out)
+
+                for w in range(1, wn):           # deferred group stores
+                    w_in = _store(base + w, g_act, w_in, buf)
+
+            w_out = w_out.at[uniq[i]].add(u_vals - u_orig)
+            return (w_in, w_out, buf)
+
+        return jax.lax.cond(strict[i] != 0, strict_tile, fused_tile,
+                            (w_in, w_out, buf))
+
+    w_in, w_out, buf = jax.lax.fori_loop(0, nt, tile_step,
+                                         (w_in, w_out, buf))
+
+    # --- flush surviving positions length-r_seq .. length-1 (increasing;
+    # the r-distance store schedule leaves the same survivors as the
+    # sequential kernel) ---
+    def flush(kk, carry):
+        w_in, buf = carry
+        p = length - r_seq + kk
+        valid = p >= 0
+        p_c = jnp.clip(p, 0, L - 1)
+        idx = tokens[p_c]
+        val = jnp.where(valid, buf[jnp.mod(p_c, rt)], w_in[idx])
+        w_in = w_in.at[idx].set(val)
+        return (w_in, buf)
+
+    w_in, buf = jax.lax.fori_loop(0, r_seq, flush, (w_in, buf))
+    return w_in, w_out
+
+
+@functools.partial(jax.jit, static_argnames=("w_f", "tile", "gemm_windows"),
+                   donate_argnums=(0, 1))
+def batch_sgns_tiled_ref(
+    w_in: jax.Array,      # (V, d)
+    w_out: jax.Array,     # (V, d)
+    tokens: jax.Array,    # (S, L)
+    negs: jax.Array,      # (S, L, N)
+    lengths: jax.Array,   # (S,)
+    lr: jax.Array,        # scalar
+    w_f: int,
+    tile: int,
+    uniq: jax.Array,      # (S, nt, T*(N+1)) — from data.batching.plan_tiles
+    scatter: jax.Array,   # (S, nt, T*(N+1))
+    ucount: jax.Array,    # (S, nt)
+    strict: jax.Array,    # (S, nt)
+    gemm_windows: int = 0,   # windows per GEMM group; 0 -> min(tile, 4)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential pass over a batch with the tiled (T windows per step)
+    semantics — the oracle for `fullw2v.fullw2v_pallas_tiled`."""
+    from repro.configs.w2v import resolve_gemm_windows
+    G = resolve_gemm_windows(tile, gemm_windows)
+
+    def body(carry, xs):
+        w_in, w_out = carry
+        toks, ngs, ln, uq, sc, uc, st = xs
+        w_in, w_out = _sentence_sgns_tiled(w_in, w_out, toks, ngs, ln, lr,
+                                           uq, sc, uc, st,
+                                           w_f=w_f, tile=tile,
+                                           gemm_windows=G)
+        return (w_in, w_out), None
+
+    (w_in, w_out), _ = jax.lax.scan(
+        body, (w_in, w_out),
+        (tokens, negs, lengths, uniq, scatter, ucount, strict))
     return w_in, w_out

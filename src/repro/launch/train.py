@@ -30,7 +30,9 @@ def run_w2v(args) -> int:
                     subsample_t=0.0, negatives=args.negatives,
                     window=args.window,
                     sentences_per_batch=args.sentences_per_batch,
-                    max_sentence_len=args.max_sentence_len)
+                    max_sentence_len=args.max_sentence_len,
+                    tile_windows=args.tile_windows,
+                    tile_gemm_windows=args.tile_gemm_windows)
     words_per_cluster = max(args.vocab // args.clusters, 1)
     corpus = synthetic_cluster_corpus(
         n_clusters=args.clusters, words_per_cluster=words_per_cluster,
@@ -89,6 +91,10 @@ def main() -> int:
     w.add_argument("--sentences-per-batch", type=int, default=2048)
     w.add_argument("--max-sentence-len", type=int, default=64)
     w.add_argument("--max-batches", type=int, default=None)
+    w.add_argument("--tile-windows", type=int, default=1,
+                   help="T: windows fused per kernel step (DESIGN.md §4)")
+    w.add_argument("--tile-gemm-windows", type=int, default=4,
+                   help="G: windows per GEMM group inside a tile")
     w.add_argument("--backend", default="jnp",
                    choices=["auto", "jnp", "pallas", "pallas_interpret"])
     w.set_defaults(fn=run_w2v)

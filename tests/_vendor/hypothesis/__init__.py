@@ -1,0 +1,100 @@
+"""Minimal, deterministic stand-in for the `hypothesis` library.
+
+The container image has no `hypothesis` wheel and installing packages is not
+allowed, so `tests/conftest.py` puts this vendored shim on ``sys.path`` when
+the real library is absent. It supports exactly the subset the test-suite
+uses:
+
+    @given(st.integers(a, b), st.floats(a, b), st.sampled_from(xs))
+    @settings(max_examples=N, deadline=None)
+
+Each ``@given`` test runs ``max_examples`` times with values drawn from a
+fixed-seed PRNG, after first exhausting the strategies' boundary examples
+(min/max for ranges, first/last for ``sampled_from``) — deterministic across
+runs, so failures are reproducible without shrinking machinery.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+from typing import Any, Callable
+
+__version__ = "0.0-vendored-shim"
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0xF011B2C  # arbitrary fixed seed: runs are deterministic
+
+
+class _Settings:
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline: Any = None, **_: Any):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+
+def settings(**kwargs: Any) -> Callable:
+    """Decorator attaching run settings; pairs with :func:`given`."""
+    cfg = _Settings(**kwargs)
+
+    def deco(fn: Callable) -> Callable:
+        fn._shim_settings = cfg
+        return fn
+
+    return deco
+
+
+def assume(condition: bool) -> None:
+    """Real hypothesis aborts the example; the shim only supports uses where
+    rejection is rare, so it just skips via an exception pytest ignores."""
+    if not condition:
+        raise _Rejected()
+
+
+class _Rejected(Exception):
+    pass
+
+
+def given(*strategies: "SearchStrategy") -> Callable:
+    def deco(fn: Callable) -> Callable:
+        cfg = getattr(fn, "_shim_settings", None)
+
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            n = (cfg or getattr(wrapper, "_shim_settings", None)
+                 or _Settings()).max_examples
+            rng = random.Random(_SEED)
+            boundary = itertools.product(*[s.boundary_examples()
+                                           for s in strategies])
+            drawn = 0
+            for vals in boundary:
+                if drawn >= n:
+                    break
+                _run_one(fn, args, kwargs, vals)
+                drawn += 1
+            while drawn < n:
+                vals = tuple(s.draw(rng) for s in strategies)
+                _run_one(fn, args, kwargs, vals)
+                drawn += 1
+
+        # tolerate decorator order @settings(...) above @given(...)
+        wrapper._shim_given = True
+        # hide the strategy parameters from pytest's fixture resolution
+        # (real hypothesis does the same: the wrapper takes no arguments)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+def _run_one(fn: Callable, args: tuple, kwargs: dict, vals: tuple) -> None:
+    try:
+        fn(*args, *vals, **kwargs)
+    except _Rejected:
+        pass
+    except Exception as e:  # noqa: BLE001 — re-raise with the failing example
+        raise AssertionError(
+            f"falsifying example (hypothesis shim): {vals!r}") from e

@@ -1,0 +1,55 @@
+"""Strategies for the vendored hypothesis shim (see ``__init__.py``)."""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 boundary: Sequence[Any] = ()):
+        self._draw = draw
+        self._boundary = list(boundary)
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def boundary_examples(self) -> List[Any]:
+        """Edge cases tried before random sampling (min/max of ranges)."""
+        return self._boundary or [self.draw(random.Random(0))]
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: rng.randint(min_value, max_value),
+        boundary=[min_value] if min_value == max_value
+        else [min_value, max_value])
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: rng.uniform(min_value, max_value),
+        boundary=[min_value, max_value])
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: rng.choice(elements),
+        boundary=[elements[0]] if len(elements) == 1
+        else [elements[0], elements[-1]])
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5,
+                          boundary=[False, True])
+
+
+def lists(elem: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng: random.Random) -> list:
+        n = rng.randint(min_size, max_size)
+        return [elem.draw(rng) for _ in range(n)]
+
+    return SearchStrategy(draw, boundary=[[elem.draw(random.Random(0))
+                                           for _ in range(min_size)]])

@@ -8,6 +8,12 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+_VENDOR = os.path.join(REPO, "tests", "_vendor")
+
+try:  # the container image ships no `hypothesis`; fall back to the shim
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, _VENDOR)
 
 
 def run_subprocess(code: str, n_devices: int = 1, timeout: int = 600):

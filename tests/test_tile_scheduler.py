@@ -1,0 +1,167 @@
+"""Property tests for the conflict-aware tile scheduler
+(`repro.data.batching.plan_tiles`, DESIGN.md §4)."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.data.batching import plan_costs, plan_tiles
+from tests.conftest import make_distinct_negs
+
+
+def _random_batch(rng, S, L, V, N):
+    tokens = rng.integers(0, V, size=(S, L)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, V, N)
+    lengths = rng.integers(0, L + 1, size=(S,)).astype(np.int32)
+    return tokens, negs, lengths
+
+
+@given(st.integers(1, 6), st.integers(1, 16), st.integers(1, 3),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_scatter_round_trips(tile, L, n_neg, seed):
+    """compact → scatter == original rows, for every valid slot."""
+    rng = np.random.default_rng(seed)
+    V = max(n_neg + 2, int(rng.integers(n_neg + 2, 20)))
+    tokens, negs, lengths = _random_batch(rng, 2, L, V, n_neg)
+    plan = plan_tiles(tokens, negs, lengths, tile)
+    m = n_neg + 1
+    for s in range(2):
+        for i in range(plan.n_tiles):
+            t0 = i * tile
+            for w in range(tile):
+                t = t0 + w
+                if t >= lengths[s]:
+                    continue
+                rows = [tokens[s, t]] + list(negs[s, t])
+                for j, row in enumerate(rows):
+                    col = plan.scatter[s, i, w * m + j]
+                    assert col < plan.ucount[s, i]
+                    assert plan.uniq[s, i, col] == row, (s, i, w, j)
+
+
+@given(st.integers(1, 6), st.integers(1, 16), st.integers(1, 3),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_strict_iff_target_involved_repeat(tile, L, n_neg, seed):
+    """strict is set exactly when a row repeated intra-tile involves a
+    target slot (target/target or target-as-negative collision); pure
+    negative/negative repeats are fused via dedup (DESIGN.md §4)."""
+    rng = np.random.default_rng(seed)
+    V = max(n_neg + 2, int(rng.integers(n_neg + 2, 15)))
+    tokens, negs, lengths = _random_batch(rng, 2, L, V, n_neg)
+    plan = plan_tiles(tokens, negs, lengths, tile)
+    for s in range(2):
+        for i in range(plan.n_tiles):
+            rows, targets = [], []
+            for w in range(tile):
+                t = i * tile + w
+                if t >= lengths[s]:
+                    continue
+                targets.append(tokens[s, t])
+                rows += [tokens[s, t]] + list(negs[s, t])
+            counts = {r: rows.count(r) for r in rows}
+            target_hit = any(counts[t] > 1 for t in targets)
+            assert bool(plan.strict[s, i]) == target_hit, (s, i, rows)
+            assert plan.ucount[s, i] == len(set(rows))
+
+
+def test_t1_layout_matches_sequential_kernel(rng):
+    """At T=1 the compacted rows are exactly [target, neg_1..neg_N] — the
+    sequential kernel's VMEM layout (prerequisite for bit-identity)."""
+    V, L, N = 40, 9, 3
+    tokens, negs, lengths = _random_batch(rng, 3, L, V, N)
+    plan = plan_tiles(tokens, negs, lengths, 1)
+    assert plan.n_tiles == L
+    assert not plan.strict.any()      # distinct-negatives invariant holds
+    for s in range(3):
+        for t in range(lengths[s]):
+            expect = [tokens[s, t]] + list(negs[s, t])
+            assert list(plan.uniq[s, t, :N + 1]) == expect
+            assert list(plan.scatter[s, t]) == list(range(N + 1))
+            assert plan.ucount[s, t] == N + 1
+
+
+def test_padding_masked(rng):
+    """uniq columns past ucount and scatter slots of out-of-sentence windows
+    are zeroed (the kernel masks them but never reads garbage)."""
+    V, L, N, tile = 12, 10, 2, 4
+    tokens, negs, lengths = _random_batch(rng, 2, L, V, N)
+    lengths[:] = [3, 0]               # force partial + empty sentences
+    plan = plan_tiles(tokens, negs, lengths, tile)
+    m = N + 1
+    for s in range(2):
+        for i in range(plan.n_tiles):
+            u = plan.ucount[s, i]
+            assert (plan.uniq[s, i, u:] == 0).all()
+            n_valid = max(0, min(tile, lengths[s] - i * tile))
+            assert (plan.scatter[s, i, n_valid * m:] == 0).all()
+    assert plan.ucount[1].sum() == 0
+
+
+def test_tile_shared_negatives_invariants(rng):
+    """`sample_batch_tiled`: per-tile sets are internally distinct, avoid
+    every target of their tile, and are broadcast to all tile windows — so
+    the per-window kernel invariant holds and tiles only go strict on
+    target/target repeats."""
+    from repro.data.negatives import NegativeSampler
+
+    V, S, L, N, tile = 50, 3, 17, 4, 4
+    sampler = NegativeSampler(np.ones(V), seed=3)
+    tokens = rng.integers(0, V, size=(S, L)).astype(np.int32)
+    lengths = rng.integers(1, L + 1, size=(S,)).astype(np.int32)
+    negs = sampler.sample_batch_tiled(tokens, N, tile, lengths)
+    assert negs.shape == (S, L, N)
+    for s in range(S):
+        for i in range(-(-L // tile)):
+            t0 = i * tile
+            wins = [t for t in range(t0, min(t0 + tile, L))]
+            sets = {tuple(negs[s, t]) for t in wins}
+            assert len(sets) == 1                  # shared across the tile
+            ns = negs[s, t0]
+            assert len(set(ns)) == N               # internally distinct
+            for t in wins:
+                if t < lengths[s]:
+                    assert tokens[s, t] not in ns  # never a tile target
+    plan = plan_tiles(tokens, negs, lengths, tile)
+    costs = plan_costs(plan, lengths, N)
+    assert costs["dma_per_window"] < 2 + 2 * (N + 1)   # dedup took effect
+
+
+def test_tile_shared_negatives_infeasible_raises():
+    """A vocab too small to supply N negatives distinct from a tile's
+    targets must fail fast instead of spinning in the fallback walk."""
+    import pytest
+
+    from repro.data.negatives import NegativeSampler
+
+    V, tile, N = 6, 4, 4
+    sampler = NegativeSampler(np.ones(V), seed=0)
+    tokens = np.arange(4, dtype=np.int32)[None, :]   # 4 distinct targets
+    with pytest.raises(ValueError, match="cannot draw"):
+        sampler.sample_batch_tiled(tokens, N, tile,
+                                   np.array([4], np.int32))
+
+
+def test_plan_costs_t1_equals_sequential():
+    """The replayed cost model at T=1 reproduces the sequential kernel's
+    per-window DMA and GEMM counts (2 ring + 2(N+1) rows, 3 GEMMs)."""
+    rng = np.random.default_rng(0)
+    V, L, N = 50, 16, 5
+    tokens, negs, lengths = _random_batch(rng, 4, L, V, N)
+    plan = plan_tiles(tokens, negs, lengths, 1)
+    costs = plan_costs(plan, lengths, N)
+    assert costs["windows"] == int(lengths.sum())
+    assert costs["dma_per_window"] == 2 + 2 * (N + 1)
+    assert costs["gemms_per_window"] == 3.0
+
+
+def test_plan_costs_tiling_reduces_gemms():
+    rng = np.random.default_rng(1)
+    V, L, N, tile = 500, 32, 5, 8
+    tokens, negs, lengths = _random_batch(rng, 4, L, V, N)
+    lengths[:] = L                    # full sentences
+    p1 = plan_costs(plan_tiles(tokens, negs, lengths, 1), lengths, N)
+    p8 = plan_costs(plan_tiles(tokens, negs, lengths, tile), lengths, N)
+    # collision-free tiles collapse 3 GEMMs/window to 3 GEMMs/tile
+    assert p8["gemms_per_window"] < p1["gemms_per_window"]
+    assert p8["dma_per_window"] <= p1["dma_per_window"]
