@@ -44,7 +44,7 @@ def run() -> List[str]:
         "naive_accSGNS_like": lambda wi, wo, b, lr:
             naive_sgns(wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
                        jnp.asarray(b.lengths), lr, w_f),
-        "fullw2v_jnp": w2v_seq_update("jnp", w_f),
+        "fullw2v_jnp": w2v_seq_update("jnp", cfg),
     }
     rows = []
     scores: Dict[str, Dict] = {}
@@ -70,10 +70,10 @@ def run() -> List[str]:
     def fresh_pipe():
         return BatchingPipeline(corpus, cfg)
 
-    a8 = evaluate(train_w2v(w2v_seq_update("jnp", w_f), fresh_pipe(), cfg,
+    a8 = evaluate(train_w2v(w2v_seq_update("jnp", cfg), fresh_pipe(), cfg,
                             epochs=GATE_EPOCHS), inv, seed=1)["separation"]
     for t in TILED_T:
-        q = evaluate(train_w2v(w2v_tiled_update(t, w_f), fresh_pipe(), cfg,
+        q = evaluate(train_w2v(w2v_tiled_update(t, cfg), fresh_pipe(), cfg,
                                epochs=GATE_EPOCHS), inv, seed=1)["separation"]
         rows.append(fmt_row(
             f"quality/tiled_T{t}_gate", 0.0,

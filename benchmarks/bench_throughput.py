@@ -13,9 +13,11 @@ from typing import Dict, List
 
 import jax.numpy as jnp
 
-from benchmarks.common import bench_cfg, bench_pipeline, fmt_row
+from benchmarks.common import (bench_cfg, bench_pipeline, fmt_row,
+                               w2v_seq_update)
 from repro.core.baselines import matrix_sgns, naive_sgns
 from repro.kernels import ops
+from repro.kernels.registry import StepInputs
 
 
 def run() -> List[str]:
@@ -31,9 +33,8 @@ def run() -> List[str]:
         "matrix_pWord2Vec_like": lambda wi, wo, b: matrix_sgns(
             wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
             jnp.asarray(b.lengths), jnp.float32(0.025), w_f),
-        "fullw2v_jnp": lambda wi, wo, b: ops.sgns_batch_update(
-            wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
-            jnp.asarray(b.lengths), jnp.float32(0.025), w_f, backend="jnp"),
+        "fullw2v_jnp": lambda wi, wo, b, _u=w2v_seq_update("jnp", cfg):
+            _u(wi, wo, b, jnp.float32(0.025)),
     }
 
     for name, fn in impls.items():
@@ -63,10 +64,11 @@ def run() -> List[str]:
     small = batches[0]
     sl = slice(0, 8)
     t0 = time.perf_counter()
-    wi, wo = ops.sgns_batch_update(
-        st.w_in, st.w_out, jnp.asarray(small.tokens[sl]),
-        jnp.asarray(small.negs[sl]), jnp.asarray(small.lengths[sl]),
-        jnp.float32(0.025), w_f, backend="pallas_interpret")
+    step = StepInputs(jnp.asarray(small.tokens[sl]),
+                      jnp.asarray(small.negs[sl]),
+                      jnp.asarray(small.lengths[sl]), jnp.float32(0.025))
+    wi, wo = ops.sgns_update(st.w_in, st.w_out, step, cfg,
+                             backend="pallas_interpret")
     wi.block_until_ready()
     dt = time.perf_counter() - t0
     words = int(small.lengths[sl].sum())

@@ -71,9 +71,8 @@ def _quality_sweep() -> Dict[int, float]:
         cfg = bench_cfg(dim=64, sentences_per_batch=128,
                         max_sentence_len=48, tile_windows=t)
         pipe = BatchingPipeline(corpus, cfg)
-        w_f = cfg.fixed_window
-        update = (w2v_tiled_update(t, w_f, use_batch_plan=True) if t > 1
-                  else w2v_seq_update("jnp", w_f))
+        update = (w2v_tiled_update(t, cfg, use_batch_plan=True) if t > 1
+                  else w2v_seq_update("jnp", cfg))
         emb = train_w2v(update, pipe, cfg, epochs=QUALITY_EPOCHS)
         inv = np.zeros(pipe.vocab.size, dtype=int)
         for w, i in pipe.vocab.ids.items():

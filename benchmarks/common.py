@@ -18,6 +18,7 @@ from repro.configs.w2v import W2VConfig
 from repro.data.batching import BatchingPipeline, plan_tiles
 from repro.data.corpus import synthetic_cluster_corpus, synthetic_zipf_corpus
 from repro.kernels import ops
+from repro.kernels.registry import StepInputs
 
 
 def bench_cfg(**kw) -> W2VConfig:
@@ -58,29 +59,32 @@ def train_w2v(update: Callable, pipe: BatchingPipeline, cfg: W2VConfig,
     return np.asarray(wi)
 
 
-def w2v_seq_update(backend: str, w_f: int) -> Callable:
+def w2v_seq_update(backend: str, cfg: W2VConfig) -> Callable:
+    """Sequential-backend update through the engine API (`ops.sgns_update`)."""
     def update(wi, wo, b, lr):
-        return ops.sgns_batch_update(
-            wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
-            jnp.asarray(b.lengths), lr, w_f, backend=backend)
+        step = StepInputs(jnp.asarray(b.tokens), jnp.asarray(b.negs),
+                          jnp.asarray(b.lengths), jnp.asarray(lr))
+        return ops.sgns_update(wi, wo, step, cfg, backend=backend)
     return update
 
 
-def w2v_tiled_update(tile: int, w_f: int, use_batch_plan: bool = False,
+def w2v_tiled_update(tile: int, cfg: W2VConfig, use_batch_plan: bool = False,
                      gemm_windows: int = 0) -> Callable:
     """Tiled-oracle update; `use_batch_plan` consumes the pipeline's own
     plan (tile-shared negatives, cfg.tile_windows path), otherwise a plan
     is built for the batch's per-window negatives (isolates the ordering
     relaxation from the sampling change)."""
+    import dataclasses
+    cfg = dataclasses.replace(cfg, tile_gemm_windows=gemm_windows)
+
     def update(wi, wo, b, lr):
         p = b.plan if (use_batch_plan and b.plan is not None) else \
             plan_tiles(b.tokens, b.negs, b.lengths, tile)
-        return ops.sgns_batch_update_tiled(
-            wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
-            jnp.asarray(b.lengths), lr, w_f, p.tile,
-            jnp.asarray(p.uniq), jnp.asarray(p.scatter),
-            jnp.asarray(p.ucount), jnp.asarray(p.strict),
-            backend="jnp_tiled", gemm_windows=gemm_windows)
+        step = StepInputs(jnp.asarray(b.tokens), jnp.asarray(b.negs),
+                          jnp.asarray(b.lengths), jnp.asarray(lr),
+                          jnp.asarray(p.uniq), jnp.asarray(p.scatter),
+                          jnp.asarray(p.ucount), jnp.asarray(p.strict))
+        return ops.sgns_update(wi, wo, step, cfg, backend="jnp_tiled")
     return update
 
 

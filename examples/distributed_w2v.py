@@ -1,7 +1,9 @@
 """Data-parallel Hogwild W2V (the paper's multi-GPU future-work, on a JAX
 mesh): sentences shard over the `data` axis, each device runs the
-sequential FULL-W2V pass on its shard, table replicas are averaged every
-batch. Re-executes itself with 4 fake host devices.
+FULL-W2V pass on its shard, table replicas are averaged every batch.
+The mesh composes with window tiling (`tile_windows=4`): the host tile
+schedule is per-sentence, so each device consumes exactly its shard's
+`plan_tiles` rows. Re-executes itself with 4 fake host devices.
 
     PYTHONPATH=src python examples/distributed_w2v.py
 """
@@ -23,18 +25,21 @@ def main() -> None:
 
     from repro.configs.w2v import smoke
     from repro.core.quality import evaluate
-    from repro.core.trainer import W2VTrainer
+    from repro.core.trainer import TrainSession
     from repro.data.batching import BatchingPipeline
     from repro.data.corpus import synthetic_cluster_corpus
     from repro.launch.mesh import make_host_mesh
 
     print("devices:", jax.device_count())
-    cfg = smoke(epochs=5, dim=32, sentences_per_batch=64)
+    # tile_windows=4: mesh sharding × window tiling compose (per-shard
+    # tile plans; Hogwild pmean averaging unchanged)
+    cfg = smoke(epochs=5, dim=32, sentences_per_batch=64, tile_windows=4)
     corpus = synthetic_cluster_corpus(n_clusters=8, words_per_cluster=16,
                                       n_sentences=800, mean_len=12, seed=0)
     pipe = BatchingPipeline(corpus, cfg)
     mesh = make_host_mesh(model=1)          # (data=4,)
-    trainer = W2VTrainer(pipe, cfg, backend="jnp", mesh=mesh)
+    trainer = TrainSession(pipe, cfg, backend="jnp", mesh=mesh)
+    print("backend:", trainer.backend)
     trainer.train()
     print(f"throughput: {trainer.words_per_sec:,.0f} words/s over "
           f"{mesh.devices.size} devices")

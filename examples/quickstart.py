@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.configs.w2v import smoke
 from repro.core.quality import evaluate
-from repro.core.trainer import W2VTrainer
+from repro.core.trainer import TrainSession
 from repro.data.batching import BatchingPipeline
 from repro.data.corpus import synthetic_cluster_corpus
 
@@ -19,9 +19,16 @@ def main() -> None:
     pipe = BatchingPipeline(corpus, cfg)
     print(f"vocab={pipe.vocab.size} words/epoch={pipe.epoch_words}")
 
-    trainer = W2VTrainer(pipe, cfg, backend="jnp")
+    # backend="auto" resolves against the kernel registry (jnp on CPU);
+    # on_metrics streams per-batch progress
+    trainer = TrainSession(
+        pipe, cfg, backend="auto",
+        on_metrics=lambda m: (m.batches_seen % 40 == 0) and print(
+            f"  epoch {m.epoch} batch {m.batches_seen}: "
+            f"{m.words_seen:,} words, lr={m.lr:.4f}"))
     trainer.train()
-    print(f"throughput: {trainer.words_per_sec:,.0f} words/sec (CPU, jnp)")
+    print(f"throughput: {trainer.words_per_sec:,.0f} words/sec "
+          f"(backend={trainer.backend})")
 
     # ground-truth clusters mapped through vocab ids
     inv = np.zeros(pipe.vocab.size, dtype=int)

@@ -12,10 +12,9 @@ import time
 import numpy as np
 
 from repro.configs.w2v import W2VConfig
-from repro.core.trainer import W2VTrainer
+from repro.core.trainer import TrainSession
 from repro.data.batching import BatchingPipeline
 from repro.data.corpus import synthetic_zipf_corpus
-from repro.train import checkpoint as ckpt
 
 
 def main() -> None:
@@ -39,20 +38,20 @@ def main() -> None:
     ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
                                              "w2v_100m_ckpt")
 
-    def on_batch(state):
-        if state.batches_seen % 50 == 0:
-            ckpt.save(ckpt_dir, state.batches_seen, state.params(), keep=2)
-            print(f"  batch {state.batches_seen}: {state.words_seen:,} words "
-                  f"(checkpointed)")
-
-    trainer = W2VTrainer(pipe, cfg, backend="jnp", on_batch=on_batch)
+    # TrainSession owns periodic checkpointing (atomic, pruned) and
+    # resumes from the latest checkpoint in ckpt_dir automatically
+    trainer = TrainSession(
+        pipe, cfg, backend="jnp", ckpt_dir=ckpt_dir, ckpt_every=50,
+        on_metrics=lambda m: (m.batches_seen % 50 == 0) and print(
+            f"  batch {m.batches_seen}: {m.words_seen:,} words "
+            f"(checkpointed)"))
+    if trainer.resumed_step is not None:
+        print(f"resumed from checkpoint batch {trainer.resumed_step}")
     t0 = time.time()
     trainer.train(max_batches=args.batches)
     print(f"trained {trainer.state.words_seen:,} words in "
           f"{time.time() - t0:.0f}s -> {trainer.words_per_sec:,.0f} words/s")
-    final = ckpt.save(ckpt_dir, trainer.state.batches_seen,
-                      trainer.state.params(), keep=2)
-    print("final checkpoint:", final)
+    print("final checkpoint:", trainer.save_checkpoint())
     emb = trainer.embeddings()
     print("embedding norms: mean", float(np.linalg.norm(emb, axis=1).mean()))
 

@@ -27,12 +27,23 @@ class W2VConfig:
                                        # (DESIGN.md §4; T=1 == sequential)
     tile_gemm_windows: int = 4         # G — windows per GEMM group inside a
                                        # tile (bounds value staleness)
+    pad_len: int = 0                   # L — padded sentence length per batch
+                                       # (jit shape reuse); 0 -> derived, see
+                                       # `resolved_pad_len`
     seed: int = 0
 
     @property
     def fixed_window(self) -> int:
         """W_f = ceil(W/2) — FULL-W2V's fixed context width (§3.2)."""
         return (self.window + 1) // 2
+
+    @property
+    def resolved_pad_len(self) -> int:
+        """The padded batch length the training session uses: ``pad_len``
+        when set, else ``min(max_sentence_len, 1024)`` (the jit shape-reuse
+        cap long sentences are chunked into)."""
+        return self.pad_len if self.pad_len > 0 else min(
+            self.max_sentence_len, 1024)
 
 
 def resolve_gemm_windows(tile: int, gemm_windows: int = 0) -> int:

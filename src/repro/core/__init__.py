@@ -3,11 +3,13 @@
 sgns.py      — canonical shared-negative window math (all impls agree on it)
 window.py    — ring-buffer lifetime state machine (reference + analysis)
 baselines.py — accSGNS-like / pWord2Vec-like comparison implementations
-trainer.py   — epochs, LR decay, Hogwild data parallelism, model averaging
+trainer.py   — streaming TrainSession: LR decay, Hogwild mesh averaging,
+               checkpoint/resume, metrics callbacks
 quality.py   — planted-cluster embedding quality metrics (Table-7 analogue)
 """
 from repro.core.sgns import pair_delta, stable_sigmoid, window_delta
-from repro.core.trainer import TrainState, W2VTrainer, init_state
+from repro.core.trainer import (StepMetrics, TrainSession, TrainState,
+                                W2VTrainer, init_state)
 
-__all__ = ["pair_delta", "stable_sigmoid", "window_delta",
-           "TrainState", "W2VTrainer", "init_state"]
+__all__ = ["pair_delta", "stable_sigmoid", "window_delta", "StepMetrics",
+           "TrainSession", "TrainState", "W2VTrainer", "init_state"]

@@ -1,27 +1,40 @@
-"""W2V trainer: epochs, linear LR decay, Hogwild data parallelism, recovery.
+"""W2V training sessions: streaming steps, LR decay, Hogwild data
+parallelism, checkpoint/resume, metrics callbacks.
 
-Single-device path runs the FULL-W2V kernel (or oracle) directly. The
-multi-device path realizes the paper's "multiple GPUs on the same node"
-future-work: sentences are sharded over the ``data`` mesh axis, each device
-runs the sequential FULL-W2V pass on its shard against a local table replica
-(Hogwild — benign divergence), and replicas are averaged every
-``sync_every`` batches (optionally int8-compressed cross-pod, see
-``distributed.compression``).
+:class:`TrainSession` owns everything around the kernel: the classic
+linear LR schedule, the Hogwild mesh averaging of the paper's multi-GPU
+future-work, periodic checkpointing with resume (``train.checkpoint`` —
+atomic, reshard-on-load), and per-step metrics. The kernel itself is
+reached exclusively through the engine API (``kernels.ops.sgns_update`` /
+``kernels.registry``): the backend name is resolved once against the
+registry at construction, so invalid combinations fail fast with the fix
+spelled out rather than mid-epoch.
+
+Single-device steps dispatch through ``sgns_update`` directly. The
+multi-device path shards sentences over the ``data`` mesh axis under
+``shard_map``; each device runs the resolved backend on its shard against
+a local table replica (Hogwild — benign divergence) and replicas are
+averaged by ``pmean``. The window-tiled path (``cfg.tile_windows > 1``)
+composes with the mesh: the host tile schedule is built per sentence, so
+sharding the batch's plan arrays along ``data`` hands every device
+exactly the per-shard ``plan_tiles`` schedule, and the averaging is
+unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.w2v import W2VConfig
 from repro.data.batching import Batch, BatchingPipeline
-from repro.kernels import ops
+from repro.kernels import ops, registry
+from repro.kernels.registry import StepInputs
 
 
 @dataclasses.dataclass
@@ -31,9 +44,21 @@ class TrainState:
     words_seen: int = 0
     batches_seen: int = 0
     epoch: int = 0
+    epoch_batch: int = 0   # batches completed within the current epoch
 
     def params(self) -> Dict[str, jax.Array]:
         return {"w_in": self.w_in, "w_out": self.w_out}
+
+
+@dataclasses.dataclass
+class StepMetrics:
+    """Per-batch metrics yielded by :meth:`TrainSession.stream`."""
+    epoch: int
+    batches_seen: int
+    words_seen: int
+    batch_words: int
+    lr: float
+    backend: str
 
 
 def init_state(vocab_size: int, cfg: W2VConfig, seed: int = 0) -> TrainState:
@@ -45,7 +70,23 @@ def init_state(vocab_size: int, cfg: W2VConfig, seed: int = 0) -> TrainState:
     return TrainState(w_in=w_in, w_out=w_out)
 
 
-class W2VTrainer:
+class TrainSession:
+    """A streaming W2V training session over a batching pipeline.
+
+    Parameters
+    ----------
+    backend : registry name or ``"auto"``. Resolved once at construction
+        (``cfg.tile_windows > 1`` selects the window-tiled family); bad
+        names or invalid capability combinations raise immediately.
+    mesh : optional device mesh with a ``data`` axis for Hogwild data
+        parallelism. Composes with ``cfg.tile_windows > 1``.
+    ckpt_dir / ckpt_every : when set, checkpoint every N batches (atomic,
+        pruned) and — unless ``resume=False`` — restore the latest
+        checkpoint at construction, continuing words/batches/epoch counts.
+    on_batch / on_metrics : callbacks after every trained batch, receiving
+        the :class:`TrainState` / :class:`StepMetrics` respectively.
+    """
+
     def __init__(
         self,
         pipeline: BatchingPipeline,
@@ -54,25 +95,41 @@ class W2VTrainer:
         mesh: Optional[Mesh] = None,
         sync_every: int = 1,
         on_batch: Optional[Callable[[TrainState], None]] = None,
+        on_metrics: Optional[Callable[[StepMetrics], None]] = None,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 0,
+        resume: bool = True,
     ):
         self.pipeline = pipeline
         self.cfg = cfg
-        self.backend = backend
+        # resolve once against the registry: invalid backend/capability
+        # combinations (unknown name, TPU-only backend off-TPU, plan
+        # mismatch) fail here, not mid-epoch. The *requested* name is kept
+        # for dispatch so batches without a plan (T=1) can still resolve
+        # their sequential variant
+        self._requested_backend = backend
+        self.backend = registry.resolve(backend,
+                                        tiled=cfg.tile_windows > 1).name
         self.mesh = mesh
         self.sync_every = sync_every
         self.on_batch = on_batch
+        self.on_metrics = on_metrics
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
         self.state = init_state(pipeline.vocab.size, cfg, cfg.seed)
         self.total_words = max(1, pipeline.epoch_words * cfg.epochs)
         self.words_per_sec = 0.0
-        if mesh is not None:
-            if cfg.tile_windows > 1:
-                # the sharded update path has no tiled dispatch yet; running
-                # it would silently train tile-shared negatives on the
-                # sequential kernel — refuse instead of mis-training
-                raise NotImplementedError(
-                    "tile_windows > 1 is not supported with a device mesh "
-                    "yet; use the single-device path or tile_windows=1")
-            self._dp_update = self._build_dp_update(mesh)
+        self.resumed_step: Optional[int] = None
+        self._resume_skip = 0
+        if ckpt_dir and resume:
+            self._maybe_resume()
+        if mesh is not None and not registry.get(self.backend).supports_mesh:
+            raise ValueError(
+                f"backend {self.backend!r} does not support mesh sharding")
+        # data-parallel update fns, built lazily per tile size (a batch
+        # with a plan uses the tiled kernel family, one without the
+        # sequential family — both compose with the mesh)
+        self._dp_updates: Dict[int, Callable] = {}
 
     # -- learning-rate schedule (classic linear decay) ----------------------
     def current_lr(self) -> float:
@@ -80,75 +137,143 @@ class W2VTrainer:
         return self.cfg.lr * max(frac, self.cfg.min_lr_frac)
 
     # -- data-parallel Hogwild step ------------------------------------------
-    def _build_dp_update(self, mesh: Mesh):
+    def _dp_update(self, tile: int) -> Callable:
+        """The sharded update for batches of tile size T (T=1: sequential
+        backend). Sentences — and, for T>1, the per-sentence rows of the
+        host tile schedule — shard over the ``data`` axis; each shard runs
+        the kernel locally and replicas are pmean-averaged (Hogwild)."""
+        fn = self._dp_updates.get(tile)
+        if fn is not None:
+            return fn
         from jax.experimental.shard_map import shard_map
 
-        w_f = self.cfg.fixed_window
-        backend = self.backend
+        # T>1 resolves the tiled counterpart of the requested backend;
+        # T=1 batches (no plan) resolve its sequential variant even when
+        # cfg.tile_windows > 1 resolved a tiled name at construction
+        be = registry.resolve(self._requested_backend, tiled=tile > 1)
+        local = ops.traceable_update(be.name,
+                                     ops.static_for(self.cfg, tile))
 
-        def local_update(w_in, w_out, toks, negs, lens, lr):
-            new_in, new_out = ops.sgns_batch_update(
-                w_in, w_out, toks, negs, lens, lr, w_f, backend=backend)
+        def local_update(w_in, w_out, step: StepInputs):
+            new_in, new_out = local(w_in, w_out, step)
             # Hogwild model averaging across the data axis
-            new_in = jax.lax.pmean(new_in, "data")
-            new_out = jax.lax.pmean(new_out, "data")
-            return new_in, new_out
+            return (jax.lax.pmean(new_in, "data"),
+                    jax.lax.pmean(new_out, "data"))
 
-        fn = shard_map(
-            local_update, mesh=mesh,
-            in_specs=(P(), P(), P("data"), P("data"), P("data"), P()),
+        plan_spec = P("data") if tile > 1 else None
+        step_specs = StepInputs(
+            tokens=P("data"), negs=P("data"), lengths=P("data"), lr=P(),
+            plan_uniq=plan_spec, plan_scatter=plan_spec,
+            plan_ucount=plan_spec, plan_strict=plan_spec)
+        sharded = shard_map(
+            local_update, mesh=self.mesh,
+            in_specs=(P(), P(), step_specs),
             out_specs=(P(), P()),
             check_rep=False,
         )
-        return jax.jit(fn, donate_argnums=(0, 1))
+        fn = jax.jit(sharded, donate_argnums=(0, 1))
+        self._dp_updates[tile] = fn
+        return fn
 
     # -- train ---------------------------------------------------------------
-    def train_batch(self, batch: Batch) -> None:
-        lr = jnp.float32(self.current_lr())
-        toks = jnp.asarray(batch.tokens)
-        negs = jnp.asarray(batch.negs)
-        lens = jnp.asarray(batch.lengths)
+    def train_batch(self, batch: Batch) -> StepMetrics:
+        lr = self.current_lr()
+        step = batch.step_inputs(lr)
         if self.mesh is not None:
-            self.state.w_in, self.state.w_out = self._dp_update(
-                self.state.w_in, self.state.w_out, toks, negs, lens, lr)
-        elif batch.plan is not None and batch.plan.tile > 1:
-            # window-tile batched path (cfg.tile_windows > 1, DESIGN.md §4)
-            p = batch.plan
-            self.state.w_in, self.state.w_out = ops.sgns_batch_update_tiled(
-                self.state.w_in, self.state.w_out, toks, negs, lens, lr,
-                self.cfg.fixed_window, p.tile,
-                jnp.asarray(p.uniq), jnp.asarray(p.scatter),
-                jnp.asarray(p.ucount), jnp.asarray(p.strict),
-                backend=ops.tiled_backend(self.backend),
-                gemm_windows=self.cfg.tile_gemm_windows)
+            self.state.w_in, self.state.w_out = self._dp_update(step.tile)(
+                self.state.w_in, self.state.w_out, step)
         else:
-            self.state.w_in, self.state.w_out = ops.sgns_batch_update(
-                self.state.w_in, self.state.w_out, toks, negs, lens, lr,
-                self.cfg.fixed_window, backend=self.backend)
+            self.state.w_in, self.state.w_out = ops.sgns_update(
+                self.state.w_in, self.state.w_out, step, self.cfg,
+                backend=self._requested_backend)
         self.state.words_seen += batch.n_words
         self.state.batches_seen += 1
+        self.state.epoch_batch += 1
+        metrics = StepMetrics(
+            epoch=self.state.epoch, batches_seen=self.state.batches_seen,
+            words_seen=self.state.words_seen, batch_words=batch.n_words,
+            lr=lr, backend=self.backend)
+        if (self.ckpt_dir and self.ckpt_every
+                and self.state.batches_seen % self.ckpt_every == 0):
+            self.save_checkpoint()
         if self.on_batch is not None:
             self.on_batch(self.state)
+        if self.on_metrics is not None:
+            self.on_metrics(metrics)
+        return metrics
+
+    def stream(self, epochs: Optional[int] = None,
+               max_batches: Optional[int] = None) -> Iterator[StepMetrics]:
+        """Stream the session: train batch by batch, yielding metrics after
+        each. Resumed sessions continue from the checkpointed position —
+        mid-epoch checkpoints fast-forward past the epoch's already-trained
+        batches so nothing is trained (or counted) twice."""
+        epochs = epochs if epochs is not None else self.cfg.epochs
+        pad_len = self.cfg.resolved_pad_len
+        n_batches = 0
+        skip = self._resume_skip  # >0 only right after a mid-epoch restore
+        self._resume_skip = 0
+        for ep in range(min(self.state.epoch, epochs), epochs):
+            self.state.epoch = ep
+            it = self.pipeline.batches(pad_len=pad_len)
+            if skip:
+                # fast-forward past the resumed epoch's already-trained
+                # (and already-counted) batches instead of re-training
+                # them, which would overrun the LR schedule
+                for _ in range(skip):
+                    if next(it, None) is None:
+                        break
+                skip = 0
+            else:
+                self.state.epoch_batch = 0
+            for batch in it:
+                yield self.train_batch(batch)
+                n_batches += 1
+                if max_batches is not None and n_batches >= max_batches:
+                    return
 
     def train(self, epochs: Optional[int] = None,
               max_batches: Optional[int] = None) -> TrainState:
-        epochs = epochs if epochs is not None else self.cfg.epochs
-        pad_len = min(self.cfg.max_sentence_len, 1024)
-        n_batches = 0
+        """Drain :meth:`stream` to completion; returns the final state."""
+        words0 = self.state.words_seen
         t0 = time.perf_counter()
-        for ep in range(epochs):
-            self.state.epoch = ep
-            for batch in self.pipeline.batches(pad_len=pad_len):
-                self.train_batch(batch)
-                n_batches += 1
-                if max_batches is not None and n_batches >= max_batches:
-                    break
-            if max_batches is not None and n_batches >= max_batches:
-                break
+        for _ in self.stream(epochs=epochs, max_batches=max_batches):
+            pass
         jax.block_until_ready(self.state.w_in)
         dt = time.perf_counter() - t0
-        self.words_per_sec = self.state.words_seen / dt if dt else 0.0
+        self.words_per_sec = ((self.state.words_seen - words0) / dt
+                              if dt else 0.0)
         return self.state
+
+    # -- checkpoint / resume --------------------------------------------------
+    def save_checkpoint(self) -> str:
+        """Atomically checkpoint tables + progress counters."""
+        from repro.train import checkpoint as ckpt
+        assert self.ckpt_dir, "TrainSession has no ckpt_dir"
+        return ckpt.save(
+            self.ckpt_dir, self.state.batches_seen, self.state.params(),
+            extra={"words_seen": self.state.words_seen,
+                   "batches_seen": self.state.batches_seen,
+                   "epoch": self.state.epoch,
+                   "epoch_batch": self.state.epoch_batch,
+                   "backend": self.backend})
+
+    def _maybe_resume(self) -> None:
+        from repro.train import checkpoint as ckpt
+        step = ckpt.latest_step(self.ckpt_dir)
+        if step is None:
+            return
+        like = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                for k, v in self.state.params().items()}
+        tree, extra = ckpt.restore(self.ckpt_dir, like, step=step)
+        self.state.w_in = tree["w_in"]
+        self.state.w_out = tree["w_out"]
+        self.state.words_seen = int(extra.get("words_seen", 0))
+        self.state.batches_seen = int(extra.get("batches_seen", step))
+        self.state.epoch = int(extra.get("epoch", 0))
+        self.state.epoch_batch = int(extra.get("epoch_batch", 0))
+        self._resume_skip = self.state.epoch_batch
+        self.resumed_step = step
 
     # -- inference helpers ----------------------------------------------------
     def embeddings(self) -> np.ndarray:
@@ -160,3 +285,7 @@ class W2VTrainer:
         sims = e @ e[word_id]
         sims[word_id] = -np.inf
         return np.argsort(-sims)[:k]
+
+
+# Backwards-compatible name: the session IS the trainer.
+W2VTrainer = TrainSession

@@ -182,6 +182,13 @@ class Batch:
     n_words: int          # real (unpadded) words in the batch
     plan: Optional[TilePlan] = None   # set when cfg.tile_windows > 1
 
+    def step_inputs(self, lr) -> "StepInputs":
+        """Lift this host batch into the engine API's device-side struct
+        (``repro.kernels.registry.StepInputs``), tile plan included."""
+        # local import: keeps this module jax-free until a step is built
+        from repro.kernels.registry import StepInputs
+        return StepInputs.from_batch(self, lr)
+
 
 @dataclasses.dataclass
 class BatchingStats:
@@ -233,7 +240,9 @@ class BatchingPipeline:
     # -- batches ------------------------------------------------------------
     def batches(self, pad_len: Optional[int] = None) -> Iterator[Batch]:
         """One epoch of (S, L) batches. `pad_len` fixes L (jit shape reuse);
-        default = cfg.max_sentence_len."""
+        default = cfg.max_sentence_len. Sentences longer than L are split
+        into L-sized rows (dropping trailing single-word chunks, which have
+        no window) — no tokens are silently truncated."""
         cfg = self.cfg
         L = pad_len or cfg.max_sentence_len
         S = cfg.sentences_per_batch
@@ -242,16 +251,21 @@ class BatchingPipeline:
         row = 0
         for sent in self._encoded_stream():
             t0 = time.perf_counter()
-            n = min(len(sent), L)
-            toks[row, :n] = sent[:n]
-            lens[row] = n
-            row += 1
+            chunks = [sent[i:i + L] for i in range(0, len(sent), L)]
             self.stats.seconds += time.perf_counter() - t0
-            if row == S:
-                yield self._finalize(toks, lens)
-                toks = np.zeros((S, L), np.int32)
-                lens = np.zeros((S,), np.int32)
-                row = 0
+            for chunk in chunks:
+                if len(chunk) < 2:
+                    continue
+                t0 = time.perf_counter()
+                toks[row, :len(chunk)] = chunk
+                lens[row] = len(chunk)
+                row += 1
+                self.stats.seconds += time.perf_counter() - t0
+                if row == S:
+                    yield self._finalize(toks, lens)
+                    toks = np.zeros((S, L), np.int32)
+                    lens = np.zeros((S,), np.int32)
+                    row = 0
         if row:
             yield self._finalize(toks[:row], lens[:row], pad_rows=S - row)
 

@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""FULL-W2V kernel package (the paper's one custom-kernel hot spot).
+
+Layout: ``fullw2v.py`` (Pallas TPU kernels) + ``ref.py`` (jnp oracles) +
+``registry.py`` (engine API: backend descriptors, ``StepInputs``,
+resolution) + ``ops.py`` (backend registrations and the single public
+``sgns_update`` dispatch entry point). Import ``repro.kernels.ops`` to
+train; query ``repro.kernels.registry`` for the available backends.
+"""

@@ -36,7 +36,10 @@ Three kernel variants share the window math (``_window_update``):
 Grid = one step per sentence; the TPU grid is sequential per core, so strict
 context-window ordering (required for convergence, paper §3.1) holds by
 construction, and batch-level parallelism comes from data parallelism across
-cores/chips (Hogwild, as in the paper).
+cores/chips (Hogwild, as in the paper). The host entry points below are
+registered with the engine API (``kernels.registry``) as the ``pallas``,
+``pallas_pipelined``, ``pallas_tiled``, and ``*_interpret`` backends;
+training code reaches them through ``kernels.ops.sgns_update``.
 
 Embedding tables stay in HBM (``memory_space=ANY``); rows move via explicit
 ``make_async_copy`` — the TPU spelling of the paper's explicit caching.

@@ -1,9 +1,26 @@
-"""Public jit'd entry points for the FULL-W2V kernel.
+"""Public entry point for the FULL-W2V kernel family (engine API).
 
-On TPU the Pallas kernel compiles natively; on CPU (this container) it runs
-under ``interpret=True`` which executes the kernel body in Python — identical
-semantics, correctness-only speed. ``backend="jnp"`` selects the pure-jnp
-oracle (also the fastest option on CPU since it fully compiles).
+One function — :func:`sgns_update` — replaces the old pair of jit'd
+dispatchers (``sgns_batch_update`` / ``sgns_batch_update_tiled``) and the
+hand-maintained sequential→tiled name map. Backend selection is data
+driven: every kernel variant registers a capability descriptor in
+``repro.kernels.registry`` and an ``update(w_in, w_out, step, static)``
+implementation; resolution ("auto", tiled mapping, invalid combinations)
+happens once against those descriptors.
+
+Registered backends:
+
+* ``jnp`` / ``jnp_tiled`` — the pure-jnp oracles (``kernels.ref``). Fully
+  compiled, so also the fastest option on CPU.
+* ``pallas`` / ``pallas_pipelined`` — the sequential Pallas kernel
+  (``kernels.fullw2v``), the pipelined form adding §3.1 prefetch (window
+  t+1's rows DMA while window t computes). TPU-native only.
+* ``pallas_tiled`` — the window-tiled Pallas kernel (T windows fused per
+  step, DESIGN.md §4). Consumes the host tile schedule carried in
+  ``StepInputs.plan_*``. TPU-native only.
+* ``pallas_interpret`` / ``pallas_tiled_interpret`` — the same kernels
+  under ``interpret=True``: the kernel body executes in Python — identical
+  semantics, correctness-only speed. What CI runs in this container.
 """
 from __future__ import annotations
 
@@ -13,114 +30,141 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.configs.w2v import W2VConfig, resolve_gemm_windows
 from repro.kernels import ref as _ref
+from repro.kernels import registry
 from repro.kernels.fullw2v import fullw2v_pallas, fullw2v_pallas_tiled
+from repro.kernels.registry import (KernelBackend, KernelStatic, StepInputs,
+                                    register)
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+# ---------------------------------------------------------------------------
+# Backend update() implementations (traceable; jit applied by the engine)
+# ---------------------------------------------------------------------------
+
+def _seq_args(step: StepInputs):
+    return (step.tokens, step.negs, step.lengths,
+            jnp.asarray(step.lr, jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("w_f", "backend"),
-                   donate_argnums=(0, 1))
-def sgns_batch_update(
+def _tiled_args(step: StepInputs, static: KernelStatic):
+    assert step.has_plan, "tiled backend requires StepInputs.plan_*"
+    return (*_seq_args(step), static.w_f, static.tile, step.plan_uniq,
+            step.plan_scatter, step.plan_ucount, step.plan_strict)
+
+
+def _update_jnp(w_in, w_out, step, static):
+    return _ref.batch_sgns_ref(w_in, w_out, *_seq_args(step), static.w_f)
+
+
+def _update_pallas(w_in, w_out, step, static):
+    return fullw2v_pallas(w_in, w_out, *_seq_args(step), static.w_f)
+
+
+def _update_pallas_pipelined(w_in, w_out, step, static):
+    return fullw2v_pallas(w_in, w_out, *_seq_args(step), static.w_f,
+                          pipeline=True)
+
+
+def _update_pallas_interpret(w_in, w_out, step, static):
+    return fullw2v_pallas(w_in, w_out, *_seq_args(step), static.w_f,
+                          interpret=True)
+
+
+def _update_jnp_tiled(w_in, w_out, step, static):
+    return _ref.batch_sgns_tiled_ref(w_in, w_out,
+                                     *_tiled_args(step, static),
+                                     gemm_windows=static.gemm_windows)
+
+
+def _update_pallas_tiled(w_in, w_out, step, static):
+    return fullw2v_pallas_tiled(w_in, w_out, *_tiled_args(step, static),
+                                gemm_windows=static.gemm_windows)
+
+
+def _update_pallas_tiled_interpret(w_in, w_out, step, static):
+    return fullw2v_pallas_tiled(w_in, w_out, *_tiled_args(step, static),
+                                gemm_windows=static.gemm_windows,
+                                interpret=True)
+
+
+register(KernelBackend(
+    name="jnp", update=_update_jnp,
+    description="compiled jnp oracle (kernels.ref.batch_sgns_ref)",
+    supports_tiling=True, tiled_variant="jnp_tiled"))
+register(KernelBackend(
+    name="pallas", update=_update_pallas,
+    description="sequential Pallas kernel (TPU-native)",
+    requires_tpu=True, supports_tiling=True, tiled_variant="pallas_tiled",
+    interpret_variant="pallas_interpret"))
+register(KernelBackend(
+    name="pallas_pipelined", update=_update_pallas_pipelined,
+    description="sequential Pallas kernel with §3.1 prefetch (TPU-native)",
+    requires_tpu=True, supports_pipeline=True, supports_tiling=True,
+    tiled_variant="pallas_tiled", interpret_variant="pallas_interpret"))
+register(KernelBackend(
+    name="pallas_interpret", update=_update_pallas_interpret,
+    description="sequential Pallas kernel, interpret mode (any platform)",
+    supports_tiling=True, tiled_variant="pallas_tiled_interpret"))
+register(KernelBackend(
+    name="jnp_tiled", update=_update_jnp_tiled,
+    description="window-tiled jnp oracle (kernels.ref.batch_sgns_tiled_ref)",
+    needs_plan=True))
+register(KernelBackend(
+    name="pallas_tiled", update=_update_pallas_tiled,
+    description="window-tiled Pallas kernel (TPU-native, DESIGN.md §4)",
+    needs_plan=True, requires_tpu=True,
+    interpret_variant="pallas_tiled_interpret"))
+register(KernelBackend(
+    name="pallas_tiled_interpret", update=_update_pallas_tiled_interpret,
+    description="window-tiled Pallas kernel, interpret mode (any platform)",
+    needs_plan=True))
+
+
+# ---------------------------------------------------------------------------
+# The single dispatch entry point
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _jitted_update(name: str, static: KernelStatic):
+    return jax.jit(traceable_update(name, static), donate_argnums=(0, 1))
+
+
+def static_for(cfg: W2VConfig, tile: int = 1) -> KernelStatic:
+    """The static kernel parameters for this config at tile size T."""
+    return KernelStatic(
+        w_f=cfg.fixed_window, tile=tile,
+        gemm_windows=(resolve_gemm_windows(tile, cfg.tile_gemm_windows)
+                      if tile > 1 else 0))
+
+
+def traceable_update(backend: str, static: KernelStatic):
+    """The resolved backend's raw traceable ``(w_in, w_out, step) ->
+    (w_in, w_out)`` update — for callers that embed it in their own jit or
+    shard_map (the trainer's Hogwild data-parallel step)."""
+    be = registry.get(backend)
+
+    def run(w_in: jax.Array, w_out: jax.Array, step: StepInputs):
+        return be.update(w_in, w_out, step, static)
+
+    return run
+
+
+def sgns_update(
     w_in: jax.Array,      # (V, d) f32 — donated
     w_out: jax.Array,     # (V, d) f32 — donated
-    tokens: jax.Array,    # (S, L) int32
-    negs: jax.Array,      # (S, L, N) int32
-    lengths: jax.Array,   # (S,) int32
-    lr: jax.Array,        # scalar f32
-    w_f: int,
-    backend: str = "auto",   # auto | pallas | pallas_interpret | jnp
+    step: StepInputs,     # tokens/negs/lengths/lr (+ tile plan if T > 1)
+    cfg: W2VConfig,
+    backend: str = "auto",
 ) -> Tuple[jax.Array, jax.Array]:
-    """Train one batch of sentences with FULL-W2V semantics."""
-    if backend == "auto":
-        backend = "pallas_pipelined" if _on_tpu() else "jnp"
-    if backend == "pallas":
-        return fullw2v_pallas(w_in, w_out, tokens, negs, lengths,
-                              jnp.asarray(lr, jnp.float32), w_f)
-    if backend == "pallas_pipelined":
-        # §3.1 prefetch: negative/target rows for window t+1 DMA while
-        # window t computes (hazard-safe; see kernels.fullw2v)
-        return fullw2v_pallas(w_in, w_out, tokens, negs, lengths,
-                              jnp.asarray(lr, jnp.float32), w_f,
-                              pipeline=True)
-    if backend == "pallas_interpret":
-        return fullw2v_pallas(w_in, w_out, tokens, negs, lengths,
-                              jnp.asarray(lr, jnp.float32), w_f,
-                              interpret=True)
-    if backend == "jnp":
-        return _ref.batch_sgns_ref(w_in, w_out, tokens, negs, lengths,
-                                   jnp.asarray(lr, jnp.float32), w_f)
-    raise ValueError(f"unknown backend {backend!r}")
+    """Train one batch of sentences with FULL-W2V semantics.
 
-
-@functools.partial(jax.jit,
-                   static_argnames=("w_f", "tile", "backend",
-                                    "gemm_windows"),
-                   donate_argnums=(0, 1))
-def sgns_batch_update_tiled(
-    w_in: jax.Array,      # (V, d) f32 — donated
-    w_out: jax.Array,     # (V, d) f32 — donated
-    tokens: jax.Array,    # (S, L) int32
-    negs: jax.Array,      # (S, L, N) int32
-    lengths: jax.Array,   # (S,) int32
-    lr: jax.Array,        # scalar f32
-    w_f: int,
-    tile: int,
-    uniq: jax.Array,      # (S, nt, T*(N+1)) int32 — plan_tiles output
-    scatter: jax.Array,   # (S, nt, T*(N+1)) int32
-    ucount: jax.Array,    # (S, nt) int32
-    strict: jax.Array,    # (S, nt) int32
-    backend: str = "auto",   # auto | pallas_tiled | pallas_tiled_interpret
-                             # | jnp_tiled
-    gemm_windows: int = 0,   # windows per GEMM group; 0 -> min(tile, 4)
-) -> Tuple[jax.Array, jax.Array]:
-    """Train one batch with T windows fused per kernel step (DESIGN.md §4).
-
-    The tile schedule (uniq/scatter/ucount/strict) must come from
-    ``repro.data.batching.plan_tiles`` for this exact batch; the host side
-    owns conflict detection, exactly as the paper assigns negative
-    preparation to the CPU. At ``tile=1`` every backend is bit-identical to
-    the sequential path. ``gemm_windows`` bounds intra-tile staleness (see
-    `fullw2v.fullw2v_pallas_tiled`).
+    The backend name resolves against the registry for this step's shape:
+    ``step.has_plan`` selects the window-tiled kernel family (T windows
+    fused per step, DESIGN.md §4; bit-identical to sequential at T=1), a
+    plain step the sequential family. Tile size and GEMM grouping are
+    static, derived from the plan shape and ``cfg.tile_gemm_windows``.
     """
-    lr = jnp.asarray(lr, jnp.float32)
-    if backend == "auto":
-        backend = "pallas_tiled" if _on_tpu() else "jnp_tiled"
-    if backend == "pallas_tiled":
-        return fullw2v_pallas_tiled(w_in, w_out, tokens, negs, lengths, lr,
-                                    w_f, tile, uniq, scatter, ucount, strict,
-                                    gemm_windows=gemm_windows)
-    if backend == "pallas_tiled_interpret":
-        return fullw2v_pallas_tiled(w_in, w_out, tokens, negs, lengths, lr,
-                                    w_f, tile, uniq, scatter, ucount, strict,
-                                    gemm_windows=gemm_windows,
-                                    interpret=True)
-    if backend == "jnp_tiled":
-        return _ref.batch_sgns_tiled_ref(w_in, w_out, tokens, negs, lengths,
-                                         lr, w_f, tile, uniq, scatter,
-                                         ucount, strict,
-                                         gemm_windows=gemm_windows)
-    raise ValueError(f"unknown tiled backend {backend!r}")
-
-
-_TILED_BACKEND = {
-    # sequential backend name -> tiled equivalent (trainer dispatch)
-    "auto": "auto",
-    "pallas": "pallas_tiled",
-    "pallas_pipelined": "pallas_tiled",
-    "pallas_interpret": "pallas_tiled_interpret",
-    "jnp": "jnp_tiled",
-    "pallas_tiled": "pallas_tiled",
-    "pallas_tiled_interpret": "pallas_tiled_interpret",
-    "jnp_tiled": "jnp_tiled",
-}
-
-
-def tiled_backend(backend: str) -> str:
-    """Map a sequential backend name to its tiled counterpart."""
-    try:
-        return _TILED_BACKEND[backend]
-    except KeyError:
-        raise ValueError(f"unknown backend {backend!r}") from None
+    be = registry.resolve(backend, tiled=step.has_plan)
+    return _jitted_update(be.name, static_for(cfg, step.tile))(
+        w_in, w_out, step)

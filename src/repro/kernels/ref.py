@@ -19,6 +19,10 @@ pre-tile-value updates for collision-free tiles, sequential replay for
 ``strict`` tiles. It consumes the same host schedule
 (`repro.data.batching.plan_tiles`) as the kernel, so interpret-mode tests
 can diff the two implementations directly.
+
+These oracles are registered with the engine API as the ``jnp`` and
+``jnp_tiled`` backends (``kernels.ops`` / ``kernels.registry``) — being
+fully compiled, they are also what ``backend="auto"`` resolves to off-TPU.
 """
 from __future__ import annotations
 

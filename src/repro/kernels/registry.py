@@ -1,0 +1,210 @@
+"""Engine API: backend registry, capability descriptors, ``StepInputs``.
+
+FULL-W2V's core design is a host/device contract (paper §3.1, §4.2): the
+CPU prepares batches, negatives, and tile schedules; the accelerator
+consumes dense arrays. This module is the single seam where that contract
+meets backend selection. Every kernel variant — the jnp oracles, the
+Pallas kernels, their interpret-mode and window-tiled forms — registers a
+:class:`KernelBackend` descriptor declaring what it needs (a host tile
+plan?) and what it supports (mesh sharding, §3.1 prefetch, window tiling,
+TPU-only compilation). Resolution ("auto", sequential→tiled mapping,
+invalid-combination errors) happens once, here, against those descriptors
+— instead of string compares scattered across trainer/ops/CLI.
+
+The actual backend implementations register themselves from
+``repro.kernels.ops`` at import time; every registry query triggers that
+import lazily so callers (CLI, tests) never have to remember to.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple, TYPE_CHECKING
+
+import jax
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids import cycles
+    from repro.data.batching import Batch
+
+
+# ---------------------------------------------------------------------------
+# StepInputs — the one argument struct every backend update() consumes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepInputs:
+    """Device inputs for one training step (a pytree: passes through jit
+    and shard_map directly). ``plan_*`` carry the host tile schedule
+    (``repro.data.batching.plan_tiles``) and are all-or-none: present for
+    the window-tiled backends, ``None`` for the sequential ones."""
+    tokens: jax.Array                       # (S, L) int32
+    negs: jax.Array                         # (S, L, N) int32
+    lengths: jax.Array                      # (S,) int32
+    lr: jax.Array                           # scalar f32
+    plan_uniq: Optional[jax.Array] = None     # (S, nt, T*(N+1)) int32
+    plan_scatter: Optional[jax.Array] = None  # (S, nt, T*(N+1)) int32
+    plan_ucount: Optional[jax.Array] = None   # (S, nt) int32
+    plan_strict: Optional[jax.Array] = None   # (S, nt) int32
+
+    @property
+    def has_plan(self) -> bool:
+        return self.plan_uniq is not None
+
+    @property
+    def tile(self) -> int:
+        """T — static, derived from the plan shape (M = T*(N+1))."""
+        if not self.has_plan:
+            return 1
+        m = self.negs.shape[-1] + 1
+        return self.plan_uniq.shape[-1] // m
+
+    @classmethod
+    def from_batch(cls, batch: "Batch", lr) -> "StepInputs":
+        """Lift a host :class:`~repro.data.batching.Batch` (numpy) onto the
+        device, carrying its tile plan along when one is attached."""
+        import jax.numpy as jnp
+
+        kw = {}
+        if batch.plan is not None:
+            p = batch.plan
+            kw = dict(plan_uniq=jnp.asarray(p.uniq),
+                      plan_scatter=jnp.asarray(p.scatter),
+                      plan_ucount=jnp.asarray(p.ucount),
+                      plan_strict=jnp.asarray(p.strict))
+        return cls(tokens=jnp.asarray(batch.tokens),
+                   negs=jnp.asarray(batch.negs),
+                   lengths=jnp.asarray(batch.lengths),
+                   lr=jnp.asarray(lr, jnp.float32), **kw)
+
+
+jax.tree_util.register_dataclass(
+    StepInputs,
+    data_fields=["tokens", "negs", "lengths", "lr", "plan_uniq",
+                 "plan_scatter", "plan_ucount", "plan_strict"],
+    meta_fields=[])
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelStatic:
+    """Static (hashable, jit-cache-key) kernel parameters."""
+    w_f: int                # fixed context width W_f = ceil(W/2)
+    tile: int = 1           # T — windows fused per kernel step
+    gemm_windows: int = 0   # G — windows per GEMM group (resolved, not 0)
+
+
+# ---------------------------------------------------------------------------
+# Backend descriptors + registry
+# ---------------------------------------------------------------------------
+
+# update(w_in, w_out, step, static) -> (w_in, w_out); traceable (the engine
+# wraps it in jit / shard_map)
+UpdateFn = Callable[[jax.Array, jax.Array, StepInputs, KernelStatic],
+                    Tuple[jax.Array, jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """One registered kernel variant and its capability descriptor."""
+    name: str
+    update: UpdateFn
+    description: str = ""
+    needs_plan: bool = False          # consumes a host tile schedule
+    supports_mesh: bool = True        # usable under shard_map data sharding
+    supports_pipeline: bool = False   # §3.1 prefetch (window t+1 DMA overlap)
+    supports_tiling: bool = False     # has a window-tiled counterpart
+    requires_tpu: bool = False        # compiles natively only on TPU
+    tiled_variant: Optional[str] = None      # name of the tiled counterpart
+    interpret_variant: Optional[str] = None  # interpret-mode escape hatch
+
+
+_REGISTRY: Dict[str, KernelBackend] = {}
+
+
+def register(backend: KernelBackend) -> KernelBackend:
+    if backend.name in _REGISTRY:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def _ensure_registered() -> None:
+    # backends self-register on import of ops; lazy so registry never has a
+    # module-level dependency back onto the implementations
+    if not _REGISTRY:
+        import repro.kernels.ops  # noqa: F401  (registers backends)
+
+
+def get(name: str) -> KernelBackend:
+    _ensure_registered()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{', '.join(sorted(_REGISTRY))} (or 'auto')") from None
+
+
+def names() -> List[str]:
+    """All registered backend names (stable registration order)."""
+    _ensure_registered()
+    return list(_REGISTRY)
+
+
+def cli_choices() -> List[str]:
+    """Backend choices for the CLI: 'auto' plus every registered backend."""
+    return ["auto"] + names()
+
+
+def resolve(name: str, *, tiled: bool = False,
+            platform: Optional[str] = None) -> KernelBackend:
+    """Resolve a backend name against the registry for this step shape.
+
+    * ``"auto"`` picks the fastest native backend for ``platform``
+      (default: the running jax backend): Pallas on TPU (pipelined for the
+      sequential path), the compiled jnp oracle elsewhere.
+    * A sequential name with ``tiled=True`` maps to its declared
+      ``tiled_variant`` (the trainer's T>1 dispatch). ``pallas_pipelined``
+      warns on this mapping: the tiled kernel does not implement §3.1
+      prefetch, so the request is downgraded — loudly, not silently.
+    * Invalid combinations (a plan-consuming backend without a plan, a
+      TPU-only backend off-TPU, an unknown name) raise ``ValueError`` with
+      the fix spelled out.
+    """
+    _ensure_registered()
+    platform = platform or jax.default_backend()
+    if name == "auto":
+        if platform == "tpu":
+            name = "pallas_tiled" if tiled else "pallas_pipelined"
+        else:
+            name = "jnp_tiled" if tiled else "jnp"
+    be = get(name)
+    if tiled and not be.needs_plan:
+        if not be.supports_tiling or be.tiled_variant is None:
+            raise ValueError(
+                f"backend {be.name!r} has no window-tiled variant; "
+                f"set cfg.tile_windows=1 or pick one of: "
+                f"{', '.join(n for n in _REGISTRY if _REGISTRY[n].needs_plan)}")
+        if be.supports_pipeline:
+            import warnings
+            warnings.warn(
+                f"backend {be.name!r} requests §3.1 prefetch, which the "
+                f"window-tiled kernel does not implement; falling back to "
+                f"{be.tiled_variant!r} (tiling amortizes DMA latency over T "
+                f"windows, subsuming most of the prefetch win)",
+                UserWarning, stacklevel=2)
+        be = _REGISTRY[be.tiled_variant]
+    if not tiled and be.needs_plan:
+        raise ValueError(
+            f"backend {be.name!r} consumes a host tile schedule but none was "
+            f"provided; set cfg.tile_windows > 1 so the batching pipeline "
+            f"attaches a plan (repro.data.batching.plan_tiles), or use a "
+            f"sequential backend: "
+            f"{', '.join(n for n in _REGISTRY if not _REGISTRY[n].needs_plan)}")
+    if be.requires_tpu and platform != "tpu":
+        hint = (f"use {be.interpret_variant!r} (interpret mode: identical "
+                f"semantics, correctness-only speed) or "
+                if be.interpret_variant else "use ")
+        raise ValueError(
+            f"backend {be.name!r} compiles natively only on TPU, but this "
+            f"process is running on {platform!r}; {hint}"
+            f"{'jnp_tiled' if be.needs_plan else 'jnp'!r} (compiled oracle).")
+    return be

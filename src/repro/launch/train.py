@@ -18,11 +18,13 @@ import sys
 import jax
 import numpy as np
 
+from repro.kernels import registry
+
 
 def run_w2v(args) -> int:
     from repro.configs.w2v import W2VConfig
     from repro.core.quality import evaluate
-    from repro.core.trainer import W2VTrainer
+    from repro.core.trainer import TrainSession
     from repro.data.batching import BatchingPipeline
     from repro.data.corpus import synthetic_cluster_corpus
 
@@ -32,7 +34,8 @@ def run_w2v(args) -> int:
                     sentences_per_batch=args.sentences_per_batch,
                     max_sentence_len=args.max_sentence_len,
                     tile_windows=args.tile_windows,
-                    tile_gemm_windows=args.tile_gemm_windows)
+                    tile_gemm_windows=args.tile_gemm_windows,
+                    pad_len=args.pad_len)
     words_per_cluster = max(args.vocab // args.clusters, 1)
     corpus = synthetic_cluster_corpus(
         n_clusters=args.clusters, words_per_cluster=words_per_cluster,
@@ -41,8 +44,16 @@ def run_w2v(args) -> int:
     print(f"vocab={pipe.vocab.size} params="
           f"{2 * pipe.vocab.size * cfg.dim / 1e6:.1f}M words/epoch="
           f"{pipe.epoch_words}")
-    trainer = W2VTrainer(pipe, cfg, backend=args.backend)
+    trainer = TrainSession(pipe, cfg, backend=args.backend,
+                           ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every)
+    print(f"backend={trainer.backend}")
+    if trainer.resumed_step is not None:
+        print(f"resumed from checkpoint batch {trainer.resumed_step} "
+              f"({trainer.state.words_seen:,} words seen)")
     trainer.train(max_batches=args.max_batches)
+    if args.ckpt_dir:
+        print("checkpoint:", trainer.save_checkpoint())
     print(f"throughput: {trainer.words_per_sec:,.0f} words/sec "
           f"({trainer.state.words_seen:,} words)")
     inv = np.zeros(pipe.vocab.size, dtype=int)
@@ -95,8 +106,21 @@ def main() -> int:
                    help="T: windows fused per kernel step (DESIGN.md §4)")
     w.add_argument("--tile-gemm-windows", type=int, default=4,
                    help="G: windows per GEMM group inside a tile")
-    w.add_argument("--backend", default="jnp",
-                   choices=["auto", "jnp", "pallas", "pallas_interpret"])
+    w.add_argument("--pad-len", type=int, default=0,
+                   help="padded batch length L (0: min(max-sentence-len, "
+                        "1024))")
+    # choices come from the backend registry, so every registered kernel
+    # variant — pipelined, tiled, interpret — is reachable from the CLI
+    w.add_argument("--backend", default="auto",
+                   choices=registry.cli_choices(),
+                   help="kernel backend; 'auto' resolves per platform and "
+                        "tile-windows against the registry descriptors")
+    w.add_argument("--ckpt-dir", default=None,
+                   help="checkpoint directory (resumes from the latest "
+                        "checkpoint when one exists)")
+    w.add_argument("--ckpt-every", type=int, default=0,
+                   help="checkpoint every N batches (0: only at exit when "
+                        "--ckpt-dir is set)")
     w.set_defaults(fn=run_w2v)
 
     l = sub.add_parser("lm")

@@ -1,0 +1,264 @@
+"""Engine API: backend registry, capability resolution, sgns_update
+dispatch, and the streaming TrainSession lifecycle."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.w2v import W2VConfig, smoke
+from repro.data.batching import BatchingPipeline, plan_tiles
+from repro.data.corpus import synthetic_cluster_corpus
+from repro.kernels import ops, registry
+from repro.kernels.ref import batch_sgns_ref
+from repro.kernels.registry import StepInputs
+
+ALL_BACKENDS = ("jnp", "pallas", "pallas_pipelined", "pallas_interpret",
+                "jnp_tiled", "pallas_tiled", "pallas_tiled_interpret")
+
+
+# ---------------------------------------------------------------------------
+# Registry + resolution
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_every_backend():
+    names = registry.names()
+    for n in ALL_BACKENDS:
+        assert n in names, names
+
+
+def test_cli_choices_cover_registry():
+    choices = registry.cli_choices()
+    assert choices[0] == "auto"
+    for n in ALL_BACKENDS:
+        assert n in choices
+
+
+def test_unknown_backend_raises_actionable():
+    with pytest.raises(ValueError, match="registered backends"):
+        registry.resolve("cuda")
+    with pytest.raises(ValueError, match="registered backends"):
+        registry.get("nope")
+
+
+def test_auto_resolution_cpu():
+    assert registry.resolve("auto", tiled=False, platform="cpu").name == "jnp"
+    assert (registry.resolve("auto", tiled=True, platform="cpu").name
+            == "jnp_tiled")
+
+
+def test_auto_resolution_tpu():
+    assert (registry.resolve("auto", tiled=False, platform="tpu").name
+            == "pallas_pipelined")
+    assert (registry.resolve("auto", tiled=True, platform="tpu").name
+            == "pallas_tiled")
+
+
+def test_tpu_only_backend_off_tpu_raises_with_escape_hatch():
+    for name in ("pallas", "pallas_pipelined", "pallas_tiled"):
+        with pytest.raises(ValueError, match="only on TPU") as ei:
+            registry.resolve(name, tiled=registry.get(name).needs_plan,
+                             platform="cpu")
+        assert "interpret" in str(ei.value)  # names the usable fallback
+
+
+def test_tiled_backend_without_plan_raises():
+    with pytest.raises(ValueError, match="tile schedule"):
+        registry.resolve("jnp_tiled", tiled=False, platform="cpu")
+
+
+def test_sequential_names_map_to_tiled_variants():
+    assert (registry.resolve("jnp", tiled=True, platform="cpu").name
+            == "jnp_tiled")
+    assert (registry.resolve("pallas_interpret", tiled=True,
+                             platform="cpu").name
+            == "pallas_tiled_interpret")
+    assert (registry.resolve("pallas", tiled=True, platform="tpu").name
+            == "pallas_tiled")
+
+
+def test_pipelined_to_tiled_mapping_warns_not_silent():
+    """The old _TILED_BACKEND map silently downgraded pallas_pipelined to
+    the non-prefetching tiled kernel; the resolver must say so."""
+    with pytest.warns(UserWarning, match="prefetch"):
+        be = registry.resolve("pallas_pipelined", tiled=True, platform="tpu")
+    assert be.name == "pallas_tiled"
+
+
+def test_tiled_resolution_is_idempotent_and_quiet():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert (registry.resolve("jnp_tiled", tiled=True,
+                                 platform="cpu").name == "jnp_tiled")
+
+
+def test_descriptors_declare_consistent_capabilities():
+    for name in registry.names():
+        be = registry.get(name)
+        if be.needs_plan:
+            assert be.tiled_variant is None  # tiled forms are terminal
+        if be.tiled_variant is not None:
+            tv = registry.get(be.tiled_variant)
+            assert tv.needs_plan, (name, be.tiled_variant)
+        if be.requires_tpu and be.interpret_variant is not None:
+            assert not registry.get(be.interpret_variant).requires_tpu
+
+
+# ---------------------------------------------------------------------------
+# sgns_update dispatch
+# ---------------------------------------------------------------------------
+
+def _toy_batch(rng, V=30, d=128, S=2, L=10, N=3):
+    from tests.conftest import make_distinct_negs
+    w_in = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    w_out = rng.normal(size=(V, d)).astype(np.float32) * 0.1
+    tokens = rng.integers(0, V, size=(S, L)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, V, N)
+    lengths = np.array([L, L - 3], np.int32)[:S]
+    return w_in, w_out, tokens, negs, lengths
+
+
+def test_sgns_update_sequential_matches_oracle(rng):
+    w_in, w_out, tokens, negs, lengths = _toy_batch(rng)
+    cfg = W2VConfig(dim=128, window=3)  # w_f = 2
+    step = StepInputs(jnp.asarray(tokens), jnp.asarray(negs),
+                      jnp.asarray(lengths), jnp.float32(0.05))
+    a_in, a_out = ops.sgns_update(jnp.asarray(w_in), jnp.asarray(w_out),
+                                  step, cfg, backend="jnp")
+    b_in, b_out = batch_sgns_ref(jnp.asarray(w_in), jnp.asarray(w_out),
+                                 jnp.asarray(tokens), jnp.asarray(negs),
+                                 jnp.asarray(lengths), jnp.float32(0.05),
+                                 cfg.fixed_window)
+    np.testing.assert_array_equal(np.asarray(a_in), np.asarray(b_in))
+    np.testing.assert_array_equal(np.asarray(a_out), np.asarray(b_out))
+
+
+def test_sgns_update_with_plan_dispatches_tiled(rng):
+    """A StepInputs carrying a plan selects the tiled family; tile size is
+    derived from the plan shape, and T=1 stays bit-identical to the
+    sequential path (the DESIGN.md §4 invariant through the new API)."""
+    w_in, w_out, tokens, negs, lengths = _toy_batch(rng)
+    cfg = W2VConfig(dim=128, window=3)
+    lr = jnp.float32(0.05)
+    plan = plan_tiles(tokens, negs, lengths, 1)
+    step = StepInputs(jnp.asarray(tokens), jnp.asarray(negs),
+                      jnp.asarray(lengths), lr,
+                      jnp.asarray(plan.uniq), jnp.asarray(plan.scatter),
+                      jnp.asarray(plan.ucount), jnp.asarray(plan.strict))
+    assert step.has_plan and step.tile == 1
+    a_in, a_out = ops.sgns_update(jnp.asarray(w_in), jnp.asarray(w_out),
+                                  step, cfg, backend="jnp")
+    seq = StepInputs(jnp.asarray(tokens), jnp.asarray(negs),
+                     jnp.asarray(lengths), lr)
+    b_in, b_out = ops.sgns_update(jnp.asarray(w_in), jnp.asarray(w_out),
+                                  seq, cfg, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(a_in), np.asarray(b_in))
+    np.testing.assert_array_equal(np.asarray(a_out), np.asarray(b_out))
+
+
+def test_sgns_update_rejects_tiled_backend_without_plan(rng):
+    w_in, w_out, tokens, negs, lengths = _toy_batch(rng)
+    cfg = W2VConfig(dim=128, window=3)
+    step = StepInputs(jnp.asarray(tokens), jnp.asarray(negs),
+                      jnp.asarray(lengths), jnp.float32(0.05))
+    with pytest.raises(ValueError, match="tile schedule"):
+        ops.sgns_update(jnp.asarray(w_in), jnp.asarray(w_out), step, cfg,
+                        backend="jnp_tiled")
+
+
+# ---------------------------------------------------------------------------
+# TrainSession lifecycle: pad_len, streaming, checkpoint/resume
+# ---------------------------------------------------------------------------
+
+def _session_fixture(tmp_path=None, **cfg_kw):
+    from repro.core.trainer import TrainSession
+    cfg = smoke(epochs=2, dim=32, sentences_per_batch=64, **cfg_kw)
+    corpus = synthetic_cluster_corpus(n_clusters=4, words_per_cluster=8,
+                                      n_sentences=300, mean_len=10, seed=0)
+    pipe = BatchingPipeline(corpus, cfg)
+    return TrainSession, cfg, pipe
+
+
+def test_config_pad_len_default_and_override():
+    assert smoke().resolved_pad_len == min(smoke().max_sentence_len, 1024)
+    assert W2VConfig(max_sentence_len=4000).resolved_pad_len == 1024
+    assert W2VConfig(pad_len=96).resolved_pad_len == 96
+
+
+def test_session_respects_cfg_pad_len():
+    """The session's padded batch length flows from cfg.pad_len, not a
+    hardcoded mid-loop cap."""
+    TrainSession, cfg, pipe = _session_fixture(pad_len=24)
+    recorded = {}
+    orig = pipe.batches
+
+    def spy(pad_len=None):
+        recorded["pad_len"] = pad_len
+        return orig(pad_len=pad_len)
+
+    pipe.batches = spy
+    sess = TrainSession(pipe, cfg, backend="jnp")
+    m = next(iter(sess.stream(max_batches=1)))
+    assert m.batches_seen == 1
+    assert recorded["pad_len"] == 24
+
+
+def test_session_invalid_backend_fails_at_construction():
+    TrainSession, cfg, pipe = _session_fixture()
+    with pytest.raises(ValueError, match="registered backends"):
+        TrainSession(pipe, cfg, backend="bogus")
+
+
+def test_session_stream_yields_metrics():
+    TrainSession, cfg, pipe = _session_fixture()
+    sess = TrainSession(pipe, cfg, backend="jnp")
+    got = list(sess.stream(max_batches=3))
+    assert [m.batches_seen for m in got] == [1, 2, 3]
+    assert all(m.backend == "jnp" for m in got)
+    assert got[-1].words_seen == sess.state.words_seen
+    assert got[0].lr >= got[-1].lr  # linear decay
+
+
+def test_session_mid_epoch_resume_does_not_double_train(tmp_path):
+    """A mid-epoch checkpoint resumes past the epoch's already-trained
+    batches: total batches/words over crash+resume equal an uninterrupted
+    run's, so the LR schedule is never overrun."""
+    TrainSession, cfg, pipe = _session_fixture()
+    full = TrainSession(BatchingPipeline(pipe.corpus, cfg, vocab=pipe.vocab),
+                        cfg, backend="jnp")
+    full.train()  # uninterrupted reference
+    assert full.current_lr() >= cfg.lr * cfg.min_lr_frac - 1e-12
+
+    d = str(tmp_path / "ckpt")
+    s1 = TrainSession(BatchingPipeline(pipe.corpus, cfg, vocab=pipe.vocab),
+                      cfg, backend="jnp", ckpt_dir=d, ckpt_every=3)
+    s1.train(max_batches=8)  # "crash" mid-epoch-1 (5 batches per epoch)
+    assert s1.state.epoch == 1 and s1.state.epoch_batch == 3
+
+    # latest checkpoint is batch 6 (ckpt_every=3): epoch 1, 1 batch in
+    s2 = TrainSession(BatchingPipeline(pipe.corpus, cfg, vocab=pipe.vocab),
+                      cfg, backend="jnp", ckpt_dir=d)
+    assert s2.resumed_step == 6
+    assert s2.state.epoch == 1 and s2.state.epoch_batch == 1
+    s2.train()
+    assert s2.state.batches_seen == full.state.batches_seen
+    assert s2.state.words_seen <= full.state.words_seen * 1.05
+
+
+def test_session_checkpoint_resume_roundtrip(tmp_path):
+    TrainSession, cfg, pipe = _session_fixture()
+    d = str(tmp_path / "ckpt")
+    s1 = TrainSession(pipe, cfg, backend="jnp", ckpt_dir=d, ckpt_every=2)
+    s1.train(max_batches=4)
+    assert s1.resumed_step is None
+
+    pipe2 = BatchingPipeline(pipe.corpus, cfg, vocab=pipe.vocab)
+    s2 = TrainSession(pipe2, cfg, backend="jnp", ckpt_dir=d)
+    assert s2.resumed_step == 4
+    assert s2.state.batches_seen == 4
+    assert s2.state.words_seen == s1.state.words_seen
+    np.testing.assert_array_equal(np.asarray(s2.state.w_in),
+                                  np.asarray(s1.state.w_in))
+    # and training continues from there
+    s2.train(max_batches=1)
+    assert s2.state.batches_seen == 5

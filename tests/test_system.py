@@ -9,6 +9,7 @@ from repro.core.trainer import W2VTrainer, init_state
 from repro.data.batching import BatchingPipeline
 from repro.data.corpus import synthetic_cluster_corpus
 from repro.kernels import ops
+from repro.kernels.registry import StepInputs
 
 
 def test_fullw2v_quality_matches_pword2vec_baseline():
@@ -32,10 +33,8 @@ def test_fullw2v_quality_matches_pword2vec_baseline():
             for b in pipe.batches(pad_len=48):
                 lr = jnp.float32(cfg.lr * max(1 - words / total, 1e-4))
                 if name == "fullw2v":
-                    wi, wo = ops.sgns_batch_update(
-                        wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
-                        jnp.asarray(b.lengths), lr, cfg.fixed_window,
-                        backend="jnp")
+                    wi, wo = ops.sgns_update(wi, wo, b.step_inputs(lr),
+                                             cfg, backend="jnp")
                 else:
                     wi, wo = matrix_sgns(
                         wi, wo, jnp.asarray(b.tokens), jnp.asarray(b.negs),
@@ -62,10 +61,10 @@ def test_semantic_ordering_strictness():
     st = init_state(pipe.vocab.size, cfg)
 
     def run(tokens, negs, lengths):
-        return ops.sgns_batch_update(
-            jnp.array(st.w_in), jnp.array(st.w_out), jnp.asarray(tokens),
-            jnp.asarray(negs), jnp.asarray(lengths), jnp.float32(0.05),
-            cfg.fixed_window, backend="jnp")
+        step = StepInputs(jnp.asarray(tokens), jnp.asarray(negs),
+                          jnp.asarray(lengths), jnp.float32(0.05))
+        return ops.sgns_update(jnp.array(st.w_in), jnp.array(st.w_out),
+                               step, cfg, backend="jnp")
 
     a1, _ = run(batch.tokens, batch.negs, batch.lengths)
     a2, _ = run(batch.tokens, batch.negs, batch.lengths)
