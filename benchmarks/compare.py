@@ -1,0 +1,142 @@
+"""CI perf-gate: compare a current bench trajectory against a baseline.
+
+Two classes of check, mirroring the repo's standing gates:
+
+  * **throughput** — any row carrying ``words_per_sec`` that exists in both
+    baseline and current must not regress by more than ``--max-regression``
+    (default 20%). New rows (no baseline) pass with a notice.
+  * **quality** — the tile-sweep's tiled-vs-sequential ratio
+    (``tile_sweep/T*`` rows, ``quality_ratio_vs_T1``) must stay within the
+    existing 1% gate (``--quality-delta``) for T <= ``--quality-max-tile``,
+    checked on the *current* run alone, so a quality break fails even on
+    the bootstrap run that has no baseline yet.
+
+Exit status is the contract: 0 = gate passed (including the bootstrap case
+of no baseline files), 1 = regression. ``--simulate-regression 0.25`` scales
+current words/sec down by 25% before checking — the knob used once in the
+PR description to demonstrate the gate actually fails, then reverted.
+
+Usage (CI):
+    python -m benchmarks.compare --baseline baseline/ \
+        --current BENCH_ci.batching.json BENCH_ci.tile_sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, List
+
+
+def load_rows(paths: List[str]) -> Dict[str, dict]:
+    """Merge the ``rows`` of every trajectory JSON in `paths`; directories
+    are expanded to the BENCH_*.json files inside them."""
+    rows: Dict[str, dict] = {}
+    for path in paths:
+        if os.path.isdir(path):
+            rows.update(load_rows(
+                sorted(glob.glob(os.path.join(path, "*.json")))))
+            continue
+        with open(path) as f:
+            data = json.load(f)
+        rows.update(data.get("rows", {}))
+    return rows
+
+
+def check_throughput(baseline: Dict[str, dict], current: Dict[str, dict],
+                     max_regression: float) -> List[str]:
+    failures = []
+    for name, cur in sorted(current.items()):
+        wps = cur.get("words_per_sec")
+        if not isinstance(wps, (int, float)):
+            continue
+        base = baseline.get(name, {}).get("words_per_sec")
+        if not isinstance(base, (int, float)) or base <= 0:
+            print(f"  [new] {name}: words_per_sec={wps:.0f} (no baseline)")
+            continue
+        ratio = wps / base
+        status = "ok" if ratio >= 1.0 - max_regression else "REGRESSED"
+        print(f"  [{status}] {name}: {base:.0f} -> {wps:.0f} words/sec "
+              f"({(ratio - 1) * 100:+.1f}%)")
+        if status == "REGRESSED":
+            failures.append(
+                f"{name}: words_per_sec fell {(1 - ratio) * 100:.1f}% "
+                f"(> {max_regression * 100:.0f}% allowed)")
+    return failures
+
+
+def check_quality(current: Dict[str, dict], quality_delta: float,
+                  max_tile: int) -> List[str]:
+    failures = []
+    for name, cur in sorted(current.items()):
+        m = re.fullmatch(r"tile_sweep/T(\d+)", name)
+        if not m or int(m.group(1)) > max_tile:
+            continue
+        ratio = cur.get("quality_ratio_vs_T1")
+        if not isinstance(ratio, (int, float)):
+            continue
+        ok = ratio >= 1.0 - quality_delta
+        print(f"  [{'ok' if ok else 'REGRESSED'}] {name}: "
+              f"quality_ratio_vs_T1={ratio:.4f}")
+        if not ok:
+            failures.append(
+                f"{name}: tiled/sequential quality ratio {ratio:.4f} "
+                f"below {1.0 - quality_delta:.2f} gate")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", nargs="*", default=[],
+                    help="baseline trajectory JSONs (or directories); "
+                         "empty/missing = bootstrap run, throughput checks "
+                         "are skipped")
+    ap.add_argument("--current", nargs="+", required=True,
+                    help="current trajectory JSONs (or directories)")
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="allowed fractional words_per_sec drop (0.20=20%%)")
+    ap.add_argument("--quality-delta", type=float, default=0.01,
+                    help="allowed tiled-vs-sequential quality loss")
+    ap.add_argument("--quality-max-tile", type=int, default=8,
+                    help="largest T the quality gate applies to")
+    ap.add_argument("--simulate-regression", type=float, default=0.0,
+                    help="scale current words_per_sec down by this fraction "
+                         "(gate-failure demonstration only)")
+    args = ap.parse_args()
+
+    baseline = load_rows([p for p in args.baseline if os.path.exists(p)])
+    current = load_rows(args.current)
+    if not current:
+        print("perf-gate: no current rows found", file=sys.stderr)
+        return 1
+    if args.simulate_regression:
+        print(f"!! simulating a {args.simulate_regression * 100:.0f}% "
+              f"slowdown on every current words_per_sec row")
+        for row in current.values():
+            if isinstance(row.get("words_per_sec"), (int, float)):
+                row["words_per_sec"] *= 1.0 - args.simulate_regression
+
+    failures: List[str] = []
+    print("perf-gate: throughput (words_per_sec vs baseline)")
+    if baseline:
+        failures += check_throughput(baseline, current, args.max_regression)
+    else:
+        print("  no baseline trajectory — bootstrap run, skipping")
+    print("perf-gate: quality (tiled vs sequential, current run)")
+    failures += check_quality(current, args.quality_delta,
+                              args.quality_max_tile)
+
+    if failures:
+        print("\nperf-gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nperf-gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -66,9 +66,22 @@ def _load_suites() -> dict:
             for name in SUITE_NAMES}
 
 
+def _only_arg(value: str):
+    """--only accepts a comma-separated subset of suites (the perf-gate
+    runs batching+tile_sweep in one invocation -> one trajectory file)."""
+    names = tuple(v.strip() for v in value.split(",") if v.strip())
+    bad = [n for n in names if n not in SUITE_NAMES]
+    if bad:
+        raise argparse.ArgumentTypeError(
+            f"unknown suite(s) {bad}; choose from {SUITE_NAMES}")
+    return names
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=SUITE_NAMES)
+    ap.add_argument("--only", default=None, type=_only_arg,
+                    metavar="SUITE[,SUITE...]",
+                    help=f"subset of suites to run; any of {SUITE_NAMES}")
     ap.add_argument("--step", type=int, default=None,
                     help="trajectory step id (default: $BENCH_STEP or "
                          "git commit count)")
@@ -83,14 +96,14 @@ def main() -> None:
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     # partial (--only) runs get their own file so they never clobber the
     # full trajectory future PRs diff against
-    suffix = f".{args.only}" if args.only else ""
+    suffix = f".{'-'.join(args.only)}" if args.only else ""
     out_path = args.out or os.path.join(repo, f"BENCH_{step}{suffix}.json")
 
     print("name,us_per_call,derived")
     failed = 0
     traj = {"step": step, "rows": {}, "errors": []}
     for name, mod in suites.items():
-        if args.only and args.only != name:
+        if args.only and name not in args.only:
             continue
         try:
             for row in mod.run():

@@ -13,8 +13,8 @@ import numpy as np
 
 from repro.configs.w2v import W2VConfig
 from repro.core.trainer import TrainSession
-from repro.data.batching import BatchingPipeline
 from repro.data.corpus import synthetic_zipf_corpus
+from repro.data.prefetch import make_pipeline
 
 
 def main() -> None:
@@ -22,16 +22,19 @@ def main() -> None:
     ap.add_argument("--batches", type=int, default=200)
     ap.add_argument("--vocab", type=int, default=400_000)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--prefetch-workers", type=int, default=2,
+                    help="async host batching workers (0 = synchronous)")
     args = ap.parse_args()
 
     cfg = W2VConfig(dim=128, window=5, negatives=5, epochs=1, min_count=1,
                     subsample_t=0.0, sentences_per_batch=512,
-                    max_sentence_len=64)
+                    max_sentence_len=64,
+                    prefetch_workers=args.prefetch_workers)
     print("building corpus...")
     corpus = synthetic_zipf_corpus(vocab_size=args.vocab,
                                    n_sentences=args.batches * 512,
                                    mean_len=24, zipf_a=1.1, seed=0)
-    pipe = BatchingPipeline(corpus, cfg)
+    pipe = make_pipeline(corpus, cfg)   # async when prefetch_workers > 0
     n_params = 2 * pipe.vocab.size * cfg.dim
     print(f"vocab={pipe.vocab.size:,} params={n_params / 1e6:.1f}M")
 
@@ -50,7 +53,8 @@ def main() -> None:
     t0 = time.time()
     trainer.train(max_batches=args.batches)
     print(f"trained {trainer.state.words_seen:,} words in "
-          f"{time.time() - t0:.0f}s -> {trainer.words_per_sec:,.0f} words/s")
+          f"{time.time() - t0:.0f}s -> {trainer.words_per_sec:,.0f} words/s "
+          f"(device busy {trainer.device_busy_frac:.0%})")
     print("final checkpoint:", trainer.save_checkpoint())
     emb = trainer.embeddings()
     print("embedding norms: mean", float(np.linalg.norm(emb, axis=1).mean()))

@@ -30,6 +30,13 @@ class W2VConfig:
     pad_len: int = 0                   # L — padded sentence length per batch
                                        # (jit shape reuse); 0 -> derived, see
                                        # `resolved_pad_len`
+    prefetch_workers: int = 0          # host pipeline workers (0 = fully
+                                       # synchronous batching, DESIGN.md §4.1)
+    prefetch_depth: int = 2            # bounded queue: finalized batches in
+                                       # flight ahead of the device step
+    prefetch_mode: str = "thread"      # "thread" (GIL-releasing numpy
+                                       # finalize) or "process" (python-heavy
+                                       # encode workloads)
     seed: int = 0
 
     @property

@@ -52,13 +52,22 @@ class TrainState:
 
 @dataclasses.dataclass
 class StepMetrics:
-    """Per-batch metrics yielded by :meth:`TrainSession.stream`."""
+    """Per-batch metrics yielded by :meth:`TrainSession.stream`.
+
+    ``fetch_seconds`` is the time the step loop spent *blocked waiting* for
+    this batch from the host pipeline — the overlap-efficiency signal: with
+    prefetch on it should collapse toward zero while the device stays busy.
+    ``queue_depth`` is the async pipeline's ready-batch depth when this
+    batch was taken (-1 for synchronous pipelines).
+    """
     epoch: int
     batches_seen: int
     words_seen: int
     batch_words: int
     lr: float
     backend: str
+    fetch_seconds: float = 0.0
+    queue_depth: int = -1
 
 
 def init_state(vocab_size: int, cfg: W2VConfig, seed: int = 0) -> TrainState:
@@ -119,6 +128,8 @@ class TrainSession:
         self.state = init_state(pipeline.vocab.size, cfg, cfg.seed)
         self.total_words = max(1, pipeline.epoch_words * cfg.epochs)
         self.words_per_sec = 0.0
+        self.fetch_seconds = 0.0   # cumulative wait on the host pipeline
+        self.wall_seconds = 0.0    # last train() wall time
         self.resumed_step: Optional[int] = None
         self._resume_skip = 0
         if ckpt_dir and resume:
@@ -132,9 +143,12 @@ class TrainSession:
         self._dp_updates: Dict[int, Callable] = {}
 
     # -- learning-rate schedule (classic linear decay) ----------------------
-    def current_lr(self) -> float:
-        frac = 1.0 - self.state.words_seen / self.total_words
+    def _lr_at(self, words_seen: int) -> float:
+        frac = 1.0 - words_seen / self.total_words
         return self.cfg.lr * max(frac, self.cfg.min_lr_frac)
+
+    def current_lr(self) -> float:
+        return self._lr_at(self.state.words_seen)
 
     # -- data-parallel Hogwild step ------------------------------------------
     def _dp_update(self, tile: int) -> Callable:
@@ -176,9 +190,17 @@ class TrainSession:
         return fn
 
     # -- train ---------------------------------------------------------------
-    def train_batch(self, batch: Batch) -> StepMetrics:
+    def train_batch(self, batch: Batch,
+                    step: Optional[StepInputs] = None,
+                    fetch_seconds: float = 0.0) -> StepMetrics:
+        """Train one batch. ``step`` may be a pre-built (already
+        device_put) :class:`StepInputs` from the prefetch path — its lr was
+        computed from the projected word count, which equals
+        ``current_lr()`` exactly because word counts are known host-side
+        ahead of training."""
         lr = self.current_lr()
-        step = batch.step_inputs(lr)
+        if step is None:
+            step = batch.step_inputs(lr)
         if self.mesh is not None:
             self.state.w_in, self.state.w_out = self._dp_update(step.tile)(
                 self.state.w_in, self.state.w_out, step)
@@ -189,10 +211,12 @@ class TrainSession:
         self.state.words_seen += batch.n_words
         self.state.batches_seen += 1
         self.state.epoch_batch += 1
+        self.fetch_seconds += fetch_seconds
         metrics = StepMetrics(
             epoch=self.state.epoch, batches_seen=self.state.batches_seen,
             words_seen=self.state.words_seen, batch_words=batch.n_words,
-            lr=lr, backend=self.backend)
+            lr=lr, backend=self.backend, fetch_seconds=fetch_seconds,
+            queue_depth=getattr(self.pipeline, "ready_depth", -1))
         if (self.ckpt_dir and self.ckpt_every
                 and self.state.batches_seen % self.ckpt_every == 0):
             self.save_checkpoint()
@@ -202,12 +226,37 @@ class TrainSession:
             self.on_metrics(metrics)
         return metrics
 
+    def _prepared(self, batch_iter: Iterator[Batch]
+                  ) -> Iterator[tuple]:
+        """Lift host batches onto the device one step ahead (double
+        buffering): batch k+1's ``jax.device_put`` is issued while the
+        device still computes batch k, so host→device transfer overlaps
+        the update. lr for batch k+1 is exact, not estimated — it depends
+        only on cumulative host-side word counts."""
+        projected = self.state.words_seen
+        try:
+            for batch in batch_iter:
+                lr = self._lr_at(projected)
+                step = batch.step_inputs(lr)   # async transfer starts here
+                projected += batch.n_words
+                yield batch, step
+        finally:
+            close = getattr(batch_iter, "close", None)
+            if close is not None:
+                close()
+
     def stream(self, epochs: Optional[int] = None,
                max_batches: Optional[int] = None) -> Iterator[StepMetrics]:
         """Stream the session: train batch by batch, yielding metrics after
         each. Resumed sessions continue from the checkpointed position —
-        mid-epoch checkpoints fast-forward past the epoch's already-trained
-        batches so nothing is trained (or counted) twice."""
+        randomness is keyed by (epoch, batch index), so the pipeline's
+        ``skip_batches`` fast-forward reproduces the exact remainder of the
+        interrupted epoch without re-finalizing (or re-counting) anything.
+
+        With ``cfg.prefetch_workers > 0`` the loop double-buffers: while
+        the device updates batch k, the async pipeline finalizes batches
+        k+1.. in its workers and batch k+1's device transfer is in flight.
+        """
         epochs = epochs if epochs is not None else self.cfg.epochs
         pad_len = self.cfg.resolved_pad_len
         n_batches = 0
@@ -215,48 +264,74 @@ class TrainSession:
         self._resume_skip = 0
         for ep in range(min(self.state.epoch, epochs), epochs):
             self.state.epoch = ep
-            it = self.pipeline.batches(pad_len=pad_len)
-            if skip:
-                # fast-forward past the resumed epoch's already-trained
-                # (and already-counted) batches instead of re-training
-                # them, which would overrun the LR schedule
-                for _ in range(skip):
-                    if next(it, None) is None:
-                        break
-                skip = 0
-            else:
+            if not skip:
                 self.state.epoch_batch = 0
-            for batch in it:
-                yield self.train_batch(batch)
-                n_batches += 1
-                if max_batches is not None and n_batches >= max_batches:
-                    return
+            it = self.pipeline.batches(pad_len=pad_len, epoch=ep,
+                                       skip_batches=skip)
+            skip = 0
+            prepared = self._prepared(it)
+            try:
+                t0 = time.perf_counter()
+                cur = next(prepared, None)
+                wait = time.perf_counter() - t0
+                while cur is not None:
+                    batch, step = cur
+                    metrics = self.train_batch(batch, step=step,
+                                               fetch_seconds=wait)
+                    n_batches += 1
+                    done = (max_batches is not None
+                            and n_batches >= max_batches)
+                    if done:
+                        yield metrics
+                        return
+                    # with prefetch, pull batch k+1 *before* yielding: the
+                    # update just dispatched is still running on the device
+                    # while the host pipeline hands over (or finishes) k+1
+                    t0 = time.perf_counter()
+                    cur = next(prepared, None)
+                    wait = time.perf_counter() - t0
+                    yield metrics
+            finally:
+                prepared.close()
 
     def train(self, epochs: Optional[int] = None,
               max_batches: Optional[int] = None) -> TrainState:
         """Drain :meth:`stream` to completion; returns the final state."""
         words0 = self.state.words_seen
+        self.fetch_seconds = 0.0
         t0 = time.perf_counter()
         for _ in self.stream(epochs=epochs, max_batches=max_batches):
             pass
         jax.block_until_ready(self.state.w_in)
         dt = time.perf_counter() - t0
+        self.wall_seconds = dt
         self.words_per_sec = ((self.state.words_seen - words0) / dt
                               if dt else 0.0)
         return self.state
 
+    @property
+    def device_busy_frac(self) -> float:
+        """Fraction of the last ``train()`` wall time NOT spent blocked on
+        the host pipeline — the overlap-efficiency headline: ~host-bound
+        when low, compute-bound (the paper's goal) when near 1."""
+        if not self.wall_seconds:
+            return 0.0
+        return max(0.0, 1.0 - self.fetch_seconds / self.wall_seconds)
+
     # -- checkpoint / resume --------------------------------------------------
     def save_checkpoint(self) -> str:
-        """Atomically checkpoint tables + progress counters."""
+        """Atomically checkpoint tables + progress counters + the host
+        pipeline cursor (exact mid-epoch resume, prefetch or not)."""
         from repro.train import checkpoint as ckpt
         assert self.ckpt_dir, "TrainSession has no ckpt_dir"
+        cursor = ckpt.PipelineCursor(
+            epoch=self.state.epoch, epoch_batch=self.state.epoch_batch,
+            prefetch_workers=self.cfg.prefetch_workers)
         return ckpt.save(
             self.ckpt_dir, self.state.batches_seen, self.state.params(),
             extra={"words_seen": self.state.words_seen,
                    "batches_seen": self.state.batches_seen,
-                   "epoch": self.state.epoch,
-                   "epoch_batch": self.state.epoch_batch,
-                   "backend": self.backend})
+                   "backend": self.backend, **cursor.to_extra()})
 
     def _maybe_resume(self) -> None:
         from repro.train import checkpoint as ckpt
@@ -270,9 +345,10 @@ class TrainSession:
         self.state.w_out = tree["w_out"]
         self.state.words_seen = int(extra.get("words_seen", 0))
         self.state.batches_seen = int(extra.get("batches_seen", step))
-        self.state.epoch = int(extra.get("epoch", 0))
-        self.state.epoch_batch = int(extra.get("epoch_batch", 0))
-        self._resume_skip = self.state.epoch_batch
+        cursor = ckpt.PipelineCursor.from_extra(extra)
+        self.state.epoch = cursor.epoch
+        self.state.epoch_batch = cursor.epoch_batch
+        self._resume_skip = cursor.epoch_batch
         self.resumed_step = step
 
     # -- inference helpers ----------------------------------------------------

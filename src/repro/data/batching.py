@@ -14,6 +14,15 @@ Responsibilities (all host-side, exactly as the paper assigns them):
     fall back to the exact sequential path for them.
 
 The device step consumes dense arrays only — no indirection on-device.
+
+Randomness is *keyed*, not streamed (DESIGN.md §4.1): subsampling draws
+depend only on ``(seed, epoch, sentence_block)`` and negative draws only on
+``(seed, epoch, batch_index)``. Every batch is therefore a pure function of
+``(corpus, cfg, epoch, batch_index)`` — which is what lets the async
+pipeline (``data/prefetch.py``) farm finalization out to any number of
+workers in any order and still emit a stream bit-identical to this
+synchronous pipeline, and what makes mid-epoch resume exact
+(``skip_batches`` skips work, not randomness).
 """
 from __future__ import annotations
 
@@ -27,6 +36,40 @@ from repro.configs.w2v import W2VConfig
 from repro.data.corpus import Corpus
 from repro.data.negatives import NegativeSampler
 from repro.data.vocab import Vocab
+
+# Sentences per subsampling-rng key (and per async encode work unit). Fixed:
+# changing it changes the subsample stream (it is part of the data layout,
+# like sentences_per_batch), so it is a module constant, not a config knob.
+ENCODE_BLOCK = 256
+
+# Domain-separation tags so the subsample and negative streams never collide
+# even where their (epoch, index) coordinates do.
+_SUBSAMPLE_TAG = 0x5B5A
+_NEGATIVES_TAG = 0x4E45
+
+
+def subsample_rng(seed: int, epoch: int, block_index: int
+                  ) -> np.random.Generator:
+    """The keyed subsampling stream for one ENCODE_BLOCK of sentences."""
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, _SUBSAMPLE_TAG, epoch, block_index]))
+
+
+def negatives_rng(seed: int, epoch: int, batch_index: int
+                  ) -> np.random.Generator:
+    """The keyed negative-sampling stream for one batch."""
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, _NEGATIVES_TAG, epoch, batch_index]))
+
+
+def encode_block(vocab: Vocab, sentences: Sequence[Sequence],
+                 subsample_t: float, rng: np.random.Generator
+                 ) -> List[np.ndarray]:
+    """Encode + subsample one block of raw sentences (vectorized LUT +
+    masked-draw fast path — bit-identical to the scalar ``encode`` /
+    ``subsample`` pair). Pure given the rng."""
+    return [vocab.subsample_ids(vocab.encode_ids(s), subsample_t, rng)
+            for s in sentences]
 
 
 @dataclasses.dataclass
@@ -192,12 +235,58 @@ class Batch:
 
 @dataclasses.dataclass
 class BatchingStats:
+    """Host batching throughput counters.
+
+    ``seconds`` measures *steady-state batching only*: the clock starts when
+    the first batch begins to be produced, so pipeline construction (vocab
+    build, alias-table build) and time spent suspended waiting on the
+    consumer never count. ``words_per_sec`` is therefore the Table-1 number
+    — what the host stage can sustain — not an end-to-end figure diluted by
+    one-time setup.
+    """
     words: int = 0
     seconds: float = 0.0
 
     @property
     def words_per_sec(self) -> float:
         return self.words / self.seconds if self.seconds else float("inf")
+
+
+@dataclasses.dataclass
+class PackedBatch:
+    """Stage-2 output: an assembled (rows, L) token block, pre-negatives.
+    ``index`` is the batch's position in the epoch stream — the key of its
+    negative-sampling rng, and the unit the async pipeline shards over."""
+    index: int
+    tokens: np.ndarray    # (rows, L) int32, rows <= S for the final batch
+    lengths: np.ndarray   # (rows,) int32
+    pad_rows: int         # rows to pad back up to S at finalize time
+
+
+def finalize_packed(packed: PackedBatch, cfg: W2VConfig,
+                    sampler: NegativeSampler, epoch: int) -> Batch:
+    """Stage 3: negatives + tile plan for one packed batch. Pure given
+    ``(packed, cfg, sampler table, epoch)`` — the keyed rng means any
+    worker, in any order, produces the identical Batch."""
+    toks, lens = packed.tokens, packed.lengths
+    rng = negatives_rng(cfg.seed, epoch, packed.index)
+    if cfg.tile_windows > 1:
+        # tile-shared negatives (Ji et al. HogBatch): one N-set per T
+        # consecutive windows — the dedup win of the tiled kernel
+        negs = sampler.sample_batch_tiled(
+            toks, cfg.negatives, cfg.tile_windows, lens, rng=rng)
+    else:
+        negs = sampler.sample_batch(toks, cfg.negatives, rng=rng)
+    if packed.pad_rows:
+        toks = np.pad(toks, ((0, packed.pad_rows), (0, 0)))
+        negs = np.pad(negs, ((0, packed.pad_rows), (0, 0), (0, 0)))
+        lens = np.pad(lens, (0, packed.pad_rows))
+    n_words = int(lens.sum())
+    plan = None
+    if cfg.tile_windows > 1:
+        plan = plan_tiles(toks, negs, lens, cfg.tile_windows)
+    return Batch(tokens=toks, negs=negs, lengths=lens, n_words=n_words,
+                 plan=plan)
 
 
 class BatchingPipeline:
@@ -209,88 +298,115 @@ class BatchingPipeline:
                                           min_count=cfg.min_count)
         self.sampler = NegativeSampler(self.vocab.unigram_weights(),
                                        seed=cfg.seed + 1)
-        self.rng = np.random.default_rng(cfg.seed)
         self.stats = BatchingStats()
+        # epoch key when batches() is called without one: each call is the
+        # next epoch, mirroring TrainSession's per-epoch iteration
+        self._auto_epoch = 0
 
-    # -- sentence stream ----------------------------------------------------
-    def _encoded_stream(self) -> Iterator[List[int]]:
+    def _resolve_epoch(self, epoch: Optional[int]) -> int:
+        if epoch is None:
+            epoch = self._auto_epoch
+        self._auto_epoch = epoch + 1
+        return epoch
+
+    # -- stage 1: encode + subsample ----------------------------------------
+    def _encoded_blocks(self, epoch: int) -> Iterator[List[List[int]]]:
+        """ENCODE_BLOCK-sized blocks of encoded+subsampled sentences, each
+        drawn from its own keyed rng."""
+        sents = self.corpus.sentences
+        for start in range(0, len(sents), ENCODE_BLOCK):
+            rng = subsample_rng(self.cfg.seed, epoch, start // ENCODE_BLOCK)
+            yield encode_block(self.vocab, sents[start:start + ENCODE_BLOCK],
+                               self.cfg.subsample_t, rng)
+
+    def _encoded_stream(self, epoch: int) -> Iterator[List[int]]:
         cfg = self.cfg
         if cfg.ignore_delimiters:
             # stream-packing mode: concatenate the corpus and re-split into
             # max-length pseudo-sentences (paper §4.1)
             buf: List[int] = []
-            for s in self.corpus.sentences:
-                enc = self.vocab.subsample(self.vocab.encode(s),
-                                           cfg.subsample_t, self.rng)
-                buf.extend(enc)
-                while len(buf) >= cfg.max_sentence_len:
-                    yield buf[:cfg.max_sentence_len]
-                    buf = buf[cfg.max_sentence_len:]
+            for block in self._encoded_blocks(epoch):
+                for enc in block:
+                    buf.extend(enc)
+                    while len(buf) >= cfg.max_sentence_len:
+                        yield buf[:cfg.max_sentence_len]
+                        buf = buf[cfg.max_sentence_len:]
             if len(buf) > 1:
                 yield buf
         else:
-            for s in self.corpus.sentences:
-                enc = self.vocab.subsample(self.vocab.encode(s),
-                                           cfg.subsample_t, self.rng)
-                for i in range(0, len(enc), cfg.max_sentence_len):
-                    chunk = enc[i:i + cfg.max_sentence_len]
-                    if len(chunk) > 1:
-                        yield chunk
+            for block in self._encoded_blocks(epoch):
+                for enc in block:
+                    for i in range(0, len(enc), cfg.max_sentence_len):
+                        chunk = enc[i:i + cfg.max_sentence_len]
+                        if len(chunk) > 1:
+                            yield chunk
 
-    # -- batches ------------------------------------------------------------
-    def batches(self, pad_len: Optional[int] = None) -> Iterator[Batch]:
-        """One epoch of (S, L) batches. `pad_len` fixes L (jit shape reuse);
-        default = cfg.max_sentence_len. Sentences longer than L are split
-        into L-sized rows (dropping trailing single-word chunks, which have
-        no window) — no tokens are silently truncated."""
+    # -- stage 2: pack into fixed-shape blocks ------------------------------
+    def _packed(self, pad_len: Optional[int], epoch: int,
+                timed: bool = True) -> Iterator[PackedBatch]:
+        """Assemble the epoch's encoded stream into indexed (S, L) token
+        blocks. Deterministic given (corpus, cfg, epoch) — both pipelines
+        share it, so their batch indexing agrees by construction."""
         cfg = self.cfg
         L = pad_len or cfg.max_sentence_len
         S = cfg.sentences_per_batch
         toks = np.zeros((S, L), np.int32)
         lens = np.zeros((S,), np.int32)
         row = 0
-        for sent in self._encoded_stream():
+        index = 0
+        stream = self._encoded_stream(epoch)
+        while True:
+            t0 = time.perf_counter()
+            sent = next(stream, None)
+            if timed:   # encode+subsample time counts as batching work
+                self.stats.seconds += time.perf_counter() - t0
+            if sent is None:
+                break
             t0 = time.perf_counter()
             chunks = [sent[i:i + L] for i in range(0, len(sent), L)]
-            self.stats.seconds += time.perf_counter() - t0
             for chunk in chunks:
                 if len(chunk) < 2:
                     continue
-                t0 = time.perf_counter()
                 toks[row, :len(chunk)] = chunk
                 lens[row] = len(chunk)
                 row += 1
-                self.stats.seconds += time.perf_counter() - t0
                 if row == S:
-                    yield self._finalize(toks, lens)
+                    if timed:
+                        self.stats.seconds += time.perf_counter() - t0
+                    yield PackedBatch(index, toks, lens, 0)
+                    index += 1
                     toks = np.zeros((S, L), np.int32)
                     lens = np.zeros((S,), np.int32)
                     row = 0
+                    t0 = time.perf_counter()
+            if timed:
+                self.stats.seconds += time.perf_counter() - t0
         if row:
-            yield self._finalize(toks[:row], lens[:row], pad_rows=S - row)
+            yield PackedBatch(index, toks[:row], lens[:row], S - row)
 
-    def _finalize(self, toks: np.ndarray, lens: np.ndarray,
-                  pad_rows: int = 0) -> Batch:
-        t0 = time.perf_counter()
-        if self.cfg.tile_windows > 1:
-            # tile-shared negatives (Ji et al. HogBatch): one N-set per T
-            # consecutive windows — the dedup win of the tiled kernel
-            negs = self.sampler.sample_batch_tiled(
-                toks, self.cfg.negatives, self.cfg.tile_windows, lens)
-        else:
-            negs = self.sampler.sample_batch(toks, self.cfg.negatives)
-        if pad_rows:
-            toks = np.pad(toks, ((0, pad_rows), (0, 0)))
-            negs = np.pad(negs, ((0, pad_rows), (0, 0), (0, 0)))
-            lens = np.pad(lens, (0, pad_rows))
-        n_words = int(lens.sum())
-        plan = None
-        if self.cfg.tile_windows > 1:
-            plan = plan_tiles(toks, negs, lens, self.cfg.tile_windows)
-        self.stats.seconds += time.perf_counter() - t0
-        self.stats.words += n_words
-        return Batch(tokens=toks, negs=negs, lengths=lens, n_words=n_words,
-                     plan=plan)
+    # -- batches ------------------------------------------------------------
+    def batches(self, pad_len: Optional[int] = None,
+                epoch: Optional[int] = None,
+                skip_batches: int = 0) -> Iterator[Batch]:
+        """One epoch of (S, L) batches. `pad_len` fixes L (jit shape reuse);
+        default = cfg.max_sentence_len. Sentences longer than L are split
+        into L-sized rows (dropping trailing single-word chunks, which have
+        no window) — no tokens are silently truncated.
+
+        `epoch` keys this epoch's randomness (default: one more than the
+        previous call). `skip_batches` fast-forwards past the epoch's first
+        k batches without finalizing them — because randomness is keyed by
+        batch index, the remaining stream is bit-identical to the suffix of
+        a full epoch (exact mid-epoch resume)."""
+        epoch = self._resolve_epoch(epoch)
+        for packed in self._packed(pad_len, epoch):
+            if packed.index < skip_batches:
+                continue
+            t0 = time.perf_counter()
+            batch = finalize_packed(packed, self.cfg, self.sampler, epoch)
+            self.stats.seconds += time.perf_counter() - t0
+            self.stats.words += batch.n_words
+            yield batch
 
     @property
     def epoch_words(self) -> int:

@@ -50,20 +50,28 @@ class NegativeSampler:
         self.rng = np.random.default_rng(seed)
         self.vocab = len(weights)
 
-    def sample_batch(self, targets: np.ndarray, n_neg: int) -> np.ndarray:
+    def sample_batch(self, targets: np.ndarray, n_neg: int,
+                     rng: Optional[np.random.Generator] = None) -> np.ndarray:
         """Negatives for every window of a (S, L) target batch -> (S, L, N).
 
         Per-window distinctness (incl. vs target) via bounded rejection
         resampling; falls back to a deterministic fill in the (vanishingly
         unlikely) case rejection does not converge.
+
+        `rng` overrides the sampler's own stream — the keyed-randomness hook
+        the batching pipelines use so every batch's draws depend only on
+        ``(seed, epoch, batch_index)``, never on who sampled before
+        (DESIGN.md §4.1: worker-count-invariant async batching).
         """
+        if rng is None:
+            rng = self.rng
         S, L = targets.shape
-        negs = self.table.sample((S, L, n_neg), self.rng).astype(np.int32)
+        negs = self.table.sample((S, L, n_neg), rng).astype(np.int32)
         for _ in range(16):
             bad = self._conflicts(targets, negs)
             if not bad.any():
                 return negs
-            resampled = self.table.sample(negs.shape, self.rng).astype(np.int32)
+            resampled = self.table.sample(negs.shape, rng).astype(np.int32)
             negs = np.where(bad, resampled, negs)
         # deterministic fallback: walk ids upward until conflict-free
         bad = self._conflicts(targets, negs)
@@ -74,7 +82,8 @@ class NegativeSampler:
 
     def sample_batch_tiled(self, targets: np.ndarray, n_neg: int,
                            tile: int,
-                           lengths: Optional[np.ndarray] = None
+                           lengths: Optional[np.ndarray] = None,
+                           rng: Optional[np.random.Generator] = None
                            ) -> np.ndarray:
         """One shared N-set per *tile* of ``tile`` consecutive windows,
         broadcast to every window of the tile -> (S, L, N).
@@ -87,7 +96,11 @@ class NegativeSampler:
         per-window invariant (negatives ≠ target, pairwise distinct) still
         holds for every window and the tile scheduler never sees a
         target-as-negative collision.
+
+        `rng` overrides the sampler's stream (see :meth:`sample_batch`).
         """
+        if rng is None:
+            rng = self.rng
         S, L = targets.shape
         nt = -(-L // tile)
         Lp = nt * tile
@@ -96,13 +109,13 @@ class NegativeSampler:
         if lengths is not None:
             tg[np.arange(Lp)[None, :] >= np.asarray(lengths)[:, None]] = -1
         tg = tg.reshape(S, nt, tile)
-        negs = self.table.sample((S, nt, n_neg), self.rng).astype(np.int32)
+        negs = self.table.sample((S, nt, n_neg), rng).astype(np.int32)
         for _ in range(16):
             bad = self._tile_conflicts(tg, negs)
             if not bad.any():
                 break
             resampled = self.table.sample(negs.shape,
-                                          self.rng).astype(np.int32)
+                                          rng).astype(np.int32)
             negs = np.where(bad, resampled, negs)
         bad = self._tile_conflicts(tg, negs)
         # deterministic fallback: each pass advances every conflicted slot,

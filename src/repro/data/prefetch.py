@@ -1,0 +1,231 @@
+"""Async host batching: multi-worker finalization + bounded prefetch.
+
+FULL-W2V assigns encoding, subsampling, negative pre-sampling, and (here)
+tile planning to the CPU *so the host can run ahead of the device* (paper
+§4.1, Table 1). :class:`AsyncBatchingPipeline` is that overlap: a producer
+thread walks the deterministic encode→pack stages while a pool of workers
+finalizes batches (negative sampling + ``plan_tiles`` — the ~90% of host
+time, all GIL-releasing numpy) into a bounded in-order queue the training
+loop drains.
+
+Determinism does not come from scheduling — it comes from the keyed
+randomness in ``data/batching.py``: every batch is a pure function of
+``(corpus, cfg, epoch, batch_index)``, so any worker count, any executor
+interleaving, and the synchronous pipeline all emit bit-identical streams
+(``tests/test_prefetch.py`` pins this). Ordering is restored by consuming
+futures in submission order.
+
+Stages (DESIGN.md §4.1):
+
+    producer thread:  encode+subsample blocks -> pack (S, L) -> submit
+    worker pool:      finalize_packed (negatives, tile plan)   [xN]
+    consumer:         in-order bounded queue -> training step
+
+Backpressure: at most ``depth`` finalized-or-in-flight batches exist ahead
+of the consumer (a BoundedSemaphore the consumer releases per yield), so a
+stalled device never piles up unbounded host memory.
+
+``mode="thread"`` shares the pipeline state directly and scales because
+finalization is numpy (GIL released); ``mode="process"`` ships the vocab
+and alias table to worker processes once at pool start, for workloads
+where python-heavy encode/subsample dominates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Executor, Future
+from typing import Iterator, List, Optional
+
+from repro.configs.w2v import W2VConfig
+from repro.data.batching import (Batch, BatchingPipeline, PackedBatch,
+                                 finalize_packed)
+from repro.data.corpus import Corpus
+from repro.data.negatives import NegativeSampler
+from repro.data.vocab import Vocab
+
+# ---------------------------------------------------------------------------
+# Process-mode worker state: shipped once via the pool initializer so each
+# finalize task carries only its PackedBatch, not the alias table.
+# ---------------------------------------------------------------------------
+_WORKER_CFG: Optional[W2VConfig] = None
+_WORKER_SAMPLER: Optional[NegativeSampler] = None
+
+
+def _proc_init(cfg: W2VConfig, sampler: NegativeSampler) -> None:
+    global _WORKER_CFG, _WORKER_SAMPLER
+    _WORKER_CFG = cfg
+    _WORKER_SAMPLER = sampler
+
+
+def _proc_finalize(packed: PackedBatch, epoch: int) -> Batch:
+    return finalize_packed(packed, _WORKER_CFG, _WORKER_SAMPLER, epoch)
+
+
+@dataclasses.dataclass
+class _EndOfEpoch:
+    """Queue sentinel: the producer finished (or failed with ``error``)."""
+    error: Optional[BaseException] = None
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    """Observability for the overlap benchmarks: queue depth over time and
+    the backpressure high-water mark."""
+    max_in_flight: int = 0          # most batches ever past the semaphore
+    depth_samples: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def mean_depth(self) -> float:
+        d = self.depth_samples
+        return sum(d) / len(d) if d else 0.0
+
+
+class AsyncBatchingPipeline(BatchingPipeline):
+    """Drop-in :class:`BatchingPipeline` whose ``batches()`` produces ahead
+    of the consumer. Bit-identical stream, overlapped wall clock.
+
+    Parameters default to the config's ``prefetch_*`` knobs; ``workers=0``
+    is coerced to 1 (an async pipeline with no workers is the sync one —
+    construct :class:`BatchingPipeline` for that).
+    """
+
+    def __init__(self, corpus: Corpus, cfg: W2VConfig,
+                 vocab: Optional[Vocab] = None,
+                 workers: Optional[int] = None,
+                 depth: Optional[int] = None,
+                 mode: Optional[str] = None):
+        super().__init__(corpus, cfg, vocab)
+        self.workers = max(1, cfg.prefetch_workers if workers is None
+                           else workers)
+        self.depth = max(1, cfg.prefetch_depth if depth is None else depth)
+        self.mode = mode or cfg.prefetch_mode
+        if self.mode not in ("thread", "process"):
+            raise ValueError(
+                f"prefetch_mode must be 'thread' or 'process', "
+                f"got {self.mode!r}")
+        self.prefetch = PrefetchStats()
+        self.ready_depth = 0   # finalized batches waiting, as of last yield
+        # exposed for tests: the machinery of the most recent batches() call
+        self._producer: Optional[threading.Thread] = None
+        self._executor: Optional[Executor] = None
+
+    # -- executor ------------------------------------------------------------
+    def _make_executor(self) -> Executor:
+        if self.mode == "process":
+            from concurrent.futures import ProcessPoolExecutor
+            return ProcessPoolExecutor(
+                max_workers=self.workers, initializer=_proc_init,
+                initargs=(self.cfg, self.sampler))
+        from concurrent.futures import ThreadPoolExecutor
+        return ThreadPoolExecutor(max_workers=self.workers,
+                                  thread_name_prefix="w2v-finalize")
+
+    def _submit(self, ex: Executor, packed: PackedBatch,
+                epoch: int) -> Future:
+        if self.mode == "process":
+            return ex.submit(_proc_finalize, packed, epoch)
+        return ex.submit(finalize_packed, packed, self.cfg, self.sampler,
+                         epoch)
+
+    # -- the async stream ----------------------------------------------------
+    def batches(self, pad_len: Optional[int] = None,
+                epoch: Optional[int] = None,
+                skip_batches: int = 0) -> Iterator[Batch]:
+        """Same contract (and same bits) as the synchronous ``batches()``;
+        production runs ahead on the worker pool, bounded by ``depth``."""
+        epoch = self._resolve_epoch(epoch)
+        ex = self._make_executor()
+        slots = threading.BoundedSemaphore(self.depth)
+        out: "queue.Queue[object]" = queue.Queue()
+        stop = threading.Event()
+        in_flight = [0]              # guarded by lock, for the high-water mark
+        lock = threading.Lock()
+
+        def produce() -> None:
+            try:
+                # stats are wall-based here (production is concurrent);
+                # timed=False keeps the sync per-stage deltas out of them
+                for packed in self._packed(pad_len, epoch, timed=False):
+                    if packed.index < skip_batches:
+                        continue
+                    while not slots.acquire(timeout=0.05):   # backpressure
+                        if stop.is_set():
+                            return
+                    if stop.is_set():
+                        return
+                    with lock:
+                        in_flight[0] += 1
+                        self.prefetch.max_in_flight = max(
+                            self.prefetch.max_in_flight, in_flight[0])
+                    out.put(self._submit(ex, packed, epoch))
+                out.put(_EndOfEpoch())
+            except BaseException as e:  # noqa: BLE001 — relayed to consumer
+                out.put(_EndOfEpoch(error=e))
+
+        producer = threading.Thread(target=produce, name="w2v-producer",
+                                    daemon=True)
+        self._producer, self._executor = producer, ex
+        wall0 = time.perf_counter()
+        stats_base = self.stats.seconds
+        idle = 0.0   # suspended-in-consumer time while the pipeline was idle
+        producer.start()
+        try:
+            while True:
+                item = out.get()
+                if isinstance(item, _EndOfEpoch):
+                    if item.error is not None:
+                        raise item.error
+                    return
+                batch = item.result()
+                with lock:
+                    in_flight[0] -= 1
+                    pending = in_flight[0]
+                self.ready_depth = self._ready_depth(out)
+                slots.release()
+                self.prefetch.depth_samples.append(self.ready_depth)
+                self.stats.words += batch.n_words
+                # steady-state clock (BatchingStats contract): wall time
+                # since the first production activity, minus stretches the
+                # generator sat suspended in the consumer while the whole
+                # pipeline was drained-and-waiting (backpressured) — those
+                # are consumer time, not batching time
+                self.stats.seconds = (stats_base
+                                      + (time.perf_counter() - wall0) - idle)
+                pipeline_idle = self.ready_depth >= pending
+                t_yield = time.perf_counter()
+                yield batch
+                if pipeline_idle:
+                    idle += time.perf_counter() - t_yield
+        finally:
+            stop.set()
+            # drain queued futures so shutdown never deadlocks on
+            # cancelled-but-queued work
+            while True:
+                try:
+                    item = out.get_nowait()
+                except queue.Empty:
+                    break
+                if isinstance(item, Future):
+                    item.cancel()
+            producer.join(timeout=10.0)
+            ex.shutdown(wait=True, cancel_futures=True)
+
+    @staticmethod
+    def _ready_depth(out: "queue.Queue[object]") -> int:
+        """Finalized batches sitting ready ahead of the consumer."""
+        with out.mutex:
+            return sum(1 for f in out.queue
+                       if isinstance(f, Future) and f.done())
+
+
+def make_pipeline(corpus: Corpus, cfg: W2VConfig,
+                  vocab: Optional[Vocab] = None) -> BatchingPipeline:
+    """The config-selected pipeline: async when ``cfg.prefetch_workers > 0``,
+    synchronous otherwise. The single construction point the CLI, examples,
+    and benchmarks share."""
+    if cfg.prefetch_workers > 0:
+        return AsyncBatchingPipeline(corpus, cfg, vocab)
+    return BatchingPipeline(corpus, cfg, vocab)

@@ -22,11 +22,13 @@ from repro.kernels import registry
 
 
 def run_w2v(args) -> int:
+    import hashlib
+
     from repro.configs.w2v import W2VConfig
     from repro.core.quality import evaluate
     from repro.core.trainer import TrainSession
-    from repro.data.batching import BatchingPipeline
     from repro.data.corpus import synthetic_cluster_corpus
+    from repro.data.prefetch import AsyncBatchingPipeline, make_pipeline
 
     cfg = W2VConfig(dim=args.dim, epochs=args.epochs, min_count=1,
                     subsample_t=0.0, negatives=args.negatives,
@@ -35,15 +37,23 @@ def run_w2v(args) -> int:
                     max_sentence_len=args.max_sentence_len,
                     tile_windows=args.tile_windows,
                     tile_gemm_windows=args.tile_gemm_windows,
-                    pad_len=args.pad_len)
+                    pad_len=args.pad_len,
+                    prefetch_workers=args.prefetch_workers,
+                    prefetch_depth=args.prefetch_depth,
+                    prefetch_mode=args.prefetch_mode)
     words_per_cluster = max(args.vocab // args.clusters, 1)
     corpus = synthetic_cluster_corpus(
         n_clusters=args.clusters, words_per_cluster=words_per_cluster,
         n_sentences=args.sentences, mean_len=24, seed=0)
-    pipe = BatchingPipeline(corpus, cfg)
+    pipe = make_pipeline(corpus, cfg)
     print(f"vocab={pipe.vocab.size} params="
           f"{2 * pipe.vocab.size * cfg.dim / 1e6:.1f}M words/epoch="
           f"{pipe.epoch_words}")
+    if isinstance(pipe, AsyncBatchingPipeline):
+        print(f"pipeline=async(workers={pipe.workers} depth={pipe.depth} "
+              f"mode={pipe.mode})")
+    else:
+        print("pipeline=sync")
     trainer = TrainSession(pipe, cfg, backend=args.backend,
                            ckpt_dir=args.ckpt_dir,
                            ckpt_every=args.ckpt_every)
@@ -55,7 +65,14 @@ def run_w2v(args) -> int:
     if args.ckpt_dir:
         print("checkpoint:", trainer.save_checkpoint())
     print(f"throughput: {trainer.words_per_sec:,.0f} words/sec "
-          f"({trainer.state.words_seen:,} words)")
+          f"({trainer.state.words_seen:,} words) "
+          f"device_busy_frac={trainer.device_busy_frac:.3f}")
+    # bit-exactness witness: identical configs must print identical digests
+    # regardless of prefetch_workers (CI's determinism smoke greps this)
+    digest = hashlib.sha1()
+    digest.update(np.asarray(trainer.state.w_in).tobytes())
+    digest.update(np.asarray(trainer.state.w_out).tobytes())
+    print(f"final_digest={digest.hexdigest()}")
     inv = np.zeros(pipe.vocab.size, dtype=int)
     for w, i in pipe.vocab.ids.items():
         inv[i] = corpus.clusters[w]
@@ -109,6 +126,17 @@ def main() -> int:
     w.add_argument("--pad-len", type=int, default=0,
                    help="padded batch length L (0: min(max-sentence-len, "
                         "1024))")
+    w.add_argument("--prefetch-workers", type=int, default=0,
+                   help="host pipeline workers; 0 = synchronous batching, "
+                        ">0 overlaps batching with device updates "
+                        "(bit-identical stream, DESIGN.md §4.1)")
+    w.add_argument("--prefetch-depth", type=int, default=2,
+                   help="bounded prefetch queue: finalized batches allowed "
+                        "in flight ahead of the device")
+    w.add_argument("--prefetch-mode", default="thread",
+                   choices=("thread", "process"),
+                   help="worker kind: threads (numpy finalize releases the "
+                        "GIL) or processes (python-heavy encode)")
     # choices come from the backend registry, so every registered kernel
     # variant — pipelined, tiled, interpret — is reachable from the CLI
     w.add_argument("--backend", default="auto",

@@ -13,6 +13,7 @@ set changes.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 import os
@@ -23,6 +24,33 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+@dataclasses.dataclass
+class PipelineCursor:
+    """Host-pipeline position stored with every W2V checkpoint.
+
+    Because batching randomness is keyed by ``(seed, epoch, batch_index)``
+    (DESIGN.md §4.1), this pair is the *complete* input-pipeline state: on
+    resume the pipeline fast-forwards with ``skip_batches=epoch_batch`` and
+    reproduces the exact remainder of the interrupted epoch — for any
+    ``prefetch_workers`` count, including one different from the run that
+    wrote the checkpoint. ``prefetch_workers`` is recorded for provenance
+    only, never replayed.
+    """
+    epoch: int = 0
+    epoch_batch: int = 0        # batches already trained in `epoch`
+    prefetch_workers: int = 0   # worker count of the writing run (info only)
+
+    def to_extra(self) -> Dict[str, int]:
+        return {"epoch": self.epoch, "epoch_batch": self.epoch_batch,
+                "prefetch_workers": self.prefetch_workers}
+
+    @classmethod
+    def from_extra(cls, extra: Dict[str, Any]) -> "PipelineCursor":
+        return cls(epoch=int(extra.get("epoch", 0)),
+                   epoch_batch=int(extra.get("epoch_batch", 0)),
+                   prefetch_workers=int(extra.get("prefetch_workers", 0)))
 
 
 def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:

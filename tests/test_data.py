@@ -24,6 +24,23 @@ def test_vocab_encode_drops_oov():
     assert v.encode(["x", "y", "z", "x"]) == [v.ids["x"], v.ids["x"]]
 
 
+def test_encode_ids_matches_encode_on_weird_tokens():
+    """The vectorized LUT encoder drops exactly what the scalar path drops:
+    OOV, negative ints (padding sentinels), out-of-range ints, and — via
+    the scalar fallback — mixed-type sentences."""
+    v = Vocab.build([[0, 1, 2, 3] * 2], min_count=2)
+    for sent in ([1, -1, 2], [3, 10_000, 0], [], [-5, -1],
+                 [1.5, 2.0], [1, "x", 2], list(range(8)) * 3):
+        assert v.encode_ids(sent).tolist() == v.encode(sent), sent
+
+
+def test_encode_ids_string_vocab_memoizes_fallback():
+    v = Vocab.build([["a", "b", "a", "b"]], min_count=1)
+    assert v.encode_ids(["a", "z", "b"]).tolist() == v.encode(["a", "z", "b"])
+    # the not-LUT-able verdict is cached: no per-sentence O(V) re-scan
+    assert v._lut_checked and v._lut is None
+
+
 @given(st.floats(1e-6, 1e-2))
 @settings(max_examples=20, deadline=None)
 def test_keep_probs_bounded(t):

@@ -192,9 +192,9 @@ def test_session_respects_cfg_pad_len():
     recorded = {}
     orig = pipe.batches
 
-    def spy(pad_len=None):
+    def spy(pad_len=None, **kw):
         recorded["pad_len"] = pad_len
-        return orig(pad_len=pad_len)
+        return orig(pad_len=pad_len, **kw)
 
     pipe.batches = spy
     sess = TrainSession(pipe, cfg, backend="jnp")
