@@ -47,6 +47,67 @@ def hlo_window_bytes() -> float:
     return float(cost.get("bytes accessed", 0.0))
 
 
+def vocab_shard_rows() -> List[str]:
+    """DESIGN.md §8 headline: per-device table memory shrinks ~1/N for the
+    cold tail while per-step exchange volume tracks *distinct rows per
+    shard* — not V. Host-side accounting only (placement + exchange plan on
+    a real Zipf batch), so the numbers are runtime-independent."""
+    from repro.configs.w2v import W2VConfig
+    from repro.data.batching import BatchingPipeline
+    from repro.data.corpus import synthetic_zipf_corpus
+    from repro.distributed.vocab_placement import VocabPlacement, \
+        plan_exchange
+
+    def setup(vocab_size):
+        cfg = W2VConfig(dim=DIM, window=5, negatives=N_NEG, min_count=1,
+                        subsample_t=0.0, sentences_per_batch=256,
+                        max_sentence_len=64)
+        corpus = synthetic_zipf_corpus(vocab_size=vocab_size,
+                                       n_sentences=2048, mean_len=24, seed=0)
+        pipe = BatchingPipeline(corpus, cfg)
+        return pipe, next(pipe.batches(pad_len=64))
+
+    # -- shard-count sweep at fixed V: rows/device -> hot + cold/N ----------
+    pipe, batch = setup(20_000)
+    v = pipe.vocab.size
+    table_mb = 2 * v * DIM * 4 / 1e6     # both tables, replicated
+    rows = [fmt_row(
+        "memory/vocab_shard_replicated", 0.0,
+        f"V={v} mb_per_device={table_mb:.1f} exchange_mb_per_step="
+        f"{table_mb:.1f} (full-table pmean moves O(V) every step)")]
+    for n in (1, 4, 16, 64):
+        pl = VocabPlacement.plan(pipe.vocab.counts, n)
+        ex = plan_exchange(batch, pl)
+        per_dev_mb = 2 * pl.rows_per_device * DIM * 4 / 1e6
+        distinct = max(ex.n_distinct) if ex.n_distinct else 0
+        # what a device actually moves with the dense collectives: the
+        # (n, R, d) psum_scatter + (R, d)->(n, R, d) all_gather, x2
+        # tables (DESIGN.md §8 exchange-volume note; R = padded width)
+        dev_xchg_kb = n * ex.request_width * DIM * 4 * 2 * 2 / 1e3
+        rows.append(fmt_row(
+            f"memory/vocab_shard_n{n}", 0.0,
+            f"hot={pl.hot} rows_per_device={pl.rows_per_device} "
+            f"mb_per_device={per_dev_mb:.2f} "
+            f"cold_shrink={pl.cold / max(pl.cold_per_shard, 1):.1f}x "
+            f"max_distinct_rows={distinct} "
+            f"device_exchange_kb_per_step={dev_xchg_kb:.0f}"))
+    # -- vocab-growth sweep at fixed shards: exchange tracks distinct rows
+    # per shard (bounded by the shard's batch slice), NOT V --------------
+    n = 16
+    for vs in (10_000, 20_000, 40_000, 80_000):
+        pipe, batch = setup(vs)
+        pl = VocabPlacement.plan(pipe.vocab.counts, n)
+        ex = plan_exchange(batch, pl)
+        distinct = max(ex.n_distinct) if ex.n_distinct else 0
+        dev_xchg_kb = n * ex.request_width * DIM * 4 * 2 * 2 / 1e3
+        rows.append(fmt_row(
+            f"memory/vocab_shard_growth_v{pipe.vocab.size}", 0.0,
+            f"shards={n} max_distinct_rows={distinct} "
+            f"device_exchange_kb_per_step={dev_xchg_kb:.0f} "
+            f"pmean_equiv_mb={2 * pipe.vocab.size * DIM * 4 / 1e6:.1f}"))
+    return rows
+
+
 def run() -> List[str]:
     rows = []
     base = None
@@ -69,6 +130,7 @@ def run() -> List[str]:
         "memory/hlo_window_bytes", 0.0,
         f"bytes={hlo_window_bytes():.0f} analytic="
         f"{(2 * DIM * 2 * W_F + 2 * DIM * (N_NEG + 1)) * 4:.0f}"))
+    rows.extend(vocab_shard_rows())
     return rows
 
 

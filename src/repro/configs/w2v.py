@@ -37,6 +37,13 @@ class W2VConfig:
     prefetch_mode: str = "thread"      # "thread" (GIL-releasing numpy
                                        # finalize) or "process" (python-heavy
                                        # encode workloads)
+    vocab_shard: bool = False          # shard the cold vocabulary tail over
+                                       # the mesh data axis; the Zipf-hot
+                                       # head stays replicated (DESIGN.md §8)
+    hot_vocab_frac: float = 0.0        # replicated head as a fraction of V;
+                                       # 0 -> smallest prefix covering
+                                       # VOCAB_HOT_COVERAGE (~90%) of corpus
+                                       # occurrences
     seed: int = 0
 
     @property

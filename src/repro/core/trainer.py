@@ -19,6 +19,13 @@ composes with the mesh: the host tile schedule is built per sentence, so
 sharding the batch's plan arrays along ``data`` hands every device
 exactly the per-shard ``plan_tiles`` schedule, and the averaging is
 unchanged.
+
+With ``cfg.vocab_shard`` (DESIGN.md §8) the session additionally shards
+the *tables*: the Zipf-hot vocabulary head is replicated, the cold tail
+striped over ``data``, and each step exchanges only the distinct cold
+rows its shards touch (``distributed.vocab_placement`` plans the
+exchange host-side; ``ops.vocab_sharded_update`` runs it under
+``shard_map``).
 """
 from __future__ import annotations
 
@@ -39,14 +46,28 @@ from repro.kernels.registry import StepInputs
 
 @dataclasses.dataclass
 class TrainState:
+    """Training state: embedding tables + progress counters.
+
+    Replicated sessions hold the full ``(V, d)`` tables in ``w_in`` /
+    ``w_out``. Vocab-sharded sessions (``cfg.vocab_shard``) hold the
+    replicated hot head there instead, plus the striped cold tail in
+    ``cold_in`` / ``cold_out`` (``(cold_pad, d)``, rows over the ``data``
+    axis — DESIGN.md §8).
+    """
     w_in: jax.Array
     w_out: jax.Array
     words_seen: int = 0
     batches_seen: int = 0
     epoch: int = 0
     epoch_batch: int = 0   # batches completed within the current epoch
+    cold_in: Optional[jax.Array] = None    # vocab-sharded cold tail
+    cold_out: Optional[jax.Array] = None
 
     def params(self) -> Dict[str, jax.Array]:
+        """Checkpointable table pytree (split names when vocab-sharded)."""
+        if self.cold_in is not None:
+            return {"hot_in": self.w_in, "hot_out": self.w_out,
+                    "cold_in": self.cold_in, "cold_out": self.cold_out}
         return {"w_in": self.w_in, "w_out": self.w_out}
 
 
@@ -70,13 +91,35 @@ class StepMetrics:
     queue_depth: int = -1
 
 
-def init_state(vocab_size: int, cfg: W2VConfig, seed: int = 0) -> TrainState:
-    """Mikolov init: w_in ~ U(-0.5/d, 0.5/d), w_out = 0."""
+def init_state(vocab_size: int, cfg: W2VConfig, seed: int = 0,
+               placement=None, mesh: Optional[Mesh] = None) -> TrainState:
+    """Mikolov init: w_in ~ U(-0.5/d, 0.5/d), w_out = 0.
+
+    With a ``placement`` (vocab sharding), the *same* full-table init is
+    drawn and then split hot/cold — so a sharded session starts from
+    exactly the tables a replicated one would (the parity baseline), and
+    the cold tail is placed with rows over the ``data`` axis.
+    """
     key = jax.random.PRNGKey(seed)
     d = cfg.dim
     w_in = (jax.random.uniform(key, (vocab_size, d), jnp.float32) - 0.5) / d
     w_out = jnp.zeros((vocab_size, d), jnp.float32)
-    return TrainState(w_in=w_in, w_out=w_out)
+    if placement is None:
+        return TrainState(w_in=w_in, w_out=w_out)
+    hot_in, cold_in = placement.split(np.asarray(w_in))
+    hot_out, cold_out = placement.split(np.asarray(w_out))
+    put = _cold_put(mesh, cold_in.shape[0])
+    return TrainState(w_in=jnp.asarray(hot_in), w_out=jnp.asarray(hot_out),
+                      cold_in=put(cold_in), cold_out=put(cold_out))
+
+
+def _cold_put(mesh: Optional[Mesh], cold_pad: int) -> Callable:
+    """device_put for cold tables under the ``cold_vocab`` sharding rule."""
+    if mesh is None:
+        return jnp.asarray
+    from repro.distributed.sharding import vocab_shard_sharding
+    sharding = vocab_shard_sharding(mesh, cold_pad)
+    return lambda arr: jax.device_put(jnp.asarray(arr), sharding)
 
 
 class TrainSession:
@@ -88,7 +131,9 @@ class TrainSession:
         (``cfg.tile_windows > 1`` selects the window-tiled family); bad
         names or invalid capability combinations raise immediately.
     mesh : optional device mesh with a ``data`` axis for Hogwild data
-        parallelism. Composes with ``cfg.tile_windows > 1``.
+        parallelism. Composes with ``cfg.tile_windows > 1`` and with
+        ``cfg.vocab_shard`` (which synthesizes a 1-device mesh when none
+        is given, so the sharded code path always runs under shard_map).
     ckpt_dir / ckpt_every : when set, checkpoint every N batches (atomic,
         pruned) and — unless ``resume=False`` — restore the latest
         checkpoint at construction, continuing words/batches/epoch counts.
@@ -117,15 +162,26 @@ class TrainSession:
         # for dispatch so batches without a plan (T=1) can still resolve
         # their sequential variant
         self._requested_backend = backend
-        self.backend = registry.resolve(backend,
-                                        tiled=cfg.tile_windows > 1).name
+        self.backend = registry.resolve(backend, tiled=cfg.tile_windows > 1,
+                                        vocab_shard=cfg.vocab_shard).name
+        if cfg.vocab_shard and mesh is None:
+            # the sharded step runs under shard_map even for one device, so
+            # the 1-shard path exercises the exact N-shard code
+            mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
         self.mesh = mesh
         self.sync_every = sync_every
         self.on_batch = on_batch
         self.on_metrics = on_metrics
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
-        self.state = init_state(pipeline.vocab.size, cfg, cfg.seed)
+        self.placement = None
+        if cfg.vocab_shard:
+            from repro.distributed.vocab_placement import VocabPlacement
+            self.placement = VocabPlacement.plan(
+                pipeline.vocab.counts, int(mesh.shape["data"]),
+                hot_frac=cfg.hot_vocab_frac)
+        self.state = init_state(pipeline.vocab.size, cfg, cfg.seed,
+                                placement=self.placement, mesh=mesh)
         self.total_words = max(1, pipeline.epoch_words * cfg.epochs)
         self.words_per_sec = 0.0
         self.fetch_seconds = 0.0   # cumulative wait on the host pipeline
@@ -139,8 +195,10 @@ class TrainSession:
                 f"backend {self.backend!r} does not support mesh sharding")
         # data-parallel update fns, built lazily per tile size (a batch
         # with a plan uses the tiled kernel family, one without the
-        # sequential family — both compose with the mesh)
+        # sequential family — both compose with the mesh); vocab-sharded
+        # updates additionally key on the batch's request width R
         self._dp_updates: Dict[int, Callable] = {}
+        self._vs_updates: Dict[tuple, Callable] = {}
 
     # -- learning-rate schedule (classic linear decay) ----------------------
     def _lr_at(self, words_seen: int) -> float:
@@ -189,6 +247,46 @@ class TrainSession:
         self._dp_updates[tile] = fn
         return fn
 
+    # -- vocab-sharded step (hot replica + cold shard, DESIGN.md §8) ---------
+    def _vs_update(self, tile: int, width: int) -> Callable:
+        """The vocab-sharded update for batches of tile size T and request
+        width R. Sentences, tile-plan rows, and per-shard request lists
+        shard over ``data``; the cold tables are row-sharded; hot replicas
+        are averaged like the replicated Hogwild path."""
+        fn = self._vs_updates.get((tile, width))
+        if fn is not None:
+            return fn
+        from jax.experimental.shard_map import shard_map
+
+        be = registry.resolve(self._requested_backend, tiled=tile > 1,
+                              vocab_shard=True)
+        local = ops.vocab_sharded_update(
+            be.name, ops.static_for(self.cfg, tile), self.placement)
+
+        plan_spec = P("data") if tile > 1 else None
+        step_specs = StepInputs(
+            tokens=P("data"), negs=P("data"), lengths=P("data"), lr=P(),
+            plan_uniq=plan_spec, plan_scatter=plan_spec,
+            plan_ucount=plan_spec, plan_strict=plan_spec,
+            cold_ids=P("data"))
+        sharded = shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(), P(), P("data"), P("data"), step_specs),
+            out_specs=(P(), P(), P("data"), P("data")),
+            check_rep=False,
+        )
+        fn = jax.jit(sharded, donate_argnums=(0, 1, 2, 3))
+        self._vs_updates[(tile, width)] = fn
+        return fn
+
+    def _make_step(self, batch: Batch, lr) -> StepInputs:
+        """Device StepInputs for a batch: the vocab-sharded exchange plan
+        when the session shards the vocabulary, the plain lift otherwise."""
+        if self.placement is not None:
+            from repro.distributed.vocab_placement import plan_exchange
+            return plan_exchange(batch, self.placement).step_inputs(lr)
+        return batch.step_inputs(lr)
+
     # -- train ---------------------------------------------------------------
     def train_batch(self, batch: Batch,
                     step: Optional[StepInputs] = None,
@@ -200,8 +298,18 @@ class TrainSession:
         ahead of training."""
         lr = self.current_lr()
         if step is None:
-            step = batch.step_inputs(lr)
-        if self.mesh is not None:
+            step = self._make_step(batch, lr)
+        elif self.placement is not None and not step.has_vocab_shard:
+            # a plain pre-built step carries un-remapped global ids; the
+            # sharded path needs the exchange plan, so rebuild from the
+            # host batch rather than crash (or silently corrupt) below
+            step = self._make_step(batch, lr)
+        if self.placement is not None:
+            st = self.state
+            st.w_in, st.w_out, st.cold_in, st.cold_out = self._vs_update(
+                step.tile, step.cold_ids.shape[1])(
+                    st.w_in, st.w_out, st.cold_in, st.cold_out, step)
+        elif self.mesh is not None:
             self.state.w_in, self.state.w_out = self._dp_update(step.tile)(
                 self.state.w_in, self.state.w_out, step)
         else:
@@ -237,7 +345,7 @@ class TrainSession:
         try:
             for batch in batch_iter:
                 lr = self._lr_at(projected)
-                step = batch.step_inputs(lr)   # async transfer starts here
+                step = self._make_step(batch, lr)  # async transfer starts
                 projected += batch.n_words
                 yield batch, step
         finally:
@@ -327,22 +435,91 @@ class TrainSession:
         cursor = ckpt.PipelineCursor(
             epoch=self.state.epoch, epoch_batch=self.state.epoch_batch,
             prefetch_workers=self.cfg.prefetch_workers)
+        extra = {"words_seen": self.state.words_seen,
+                 "batches_seen": self.state.batches_seen,
+                 "backend": self.backend, **cursor.to_extra()}
+        if self.placement is not None:
+            extra["vocab_shard"] = self.placement.to_extra()
         return ckpt.save(
             self.ckpt_dir, self.state.batches_seen, self.state.params(),
-            extra={"words_seen": self.state.words_seen,
-                   "batches_seen": self.state.batches_seen,
-                   "backend": self.backend, **cursor.to_extra()})
+            extra=extra)
+
+    def _restore_tables(self, step: int) -> Dict:
+        """Restore embedding tables across table formats: a split-table
+        (vocab-sharded) checkpoint restores into a replicated session and
+        vice versa, by reassembling the full tables through the writing
+        run's placement (recorded in the checkpoint extra) and re-splitting
+        with this session's. Same-format restores skip the round trip."""
+        from repro.distributed.vocab_placement import VocabPlacement
+        from repro.train import checkpoint as ckpt
+        leaves, extra = ckpt.peek(self.ckpt_dir, step=step)
+        split_ckpt = "hot_in" in leaves
+        like_now = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                    for k, v in self.state.params().items()}
+        same_format = (set(leaves) == set(like_now) and all(
+            tuple(leaves[k]["shape"]) == tuple(like_now[k].shape)
+            for k in like_now))
+        if same_format and split_ckpt:
+            # shapes alone can coincide across shard counts (equal
+            # cold_pad, different stripe order) — the placements must
+            # match exactly or the cold rows land on the wrong shards
+            meta = extra.get("vocab_shard")
+            same_format = (self.placement is not None and meta is not None
+                           and VocabPlacement.from_extra(meta)
+                           == self.placement)
+        if same_format:
+            tree, extra = ckpt.restore(self.ckpt_dir, like_now, step=step)
+        else:
+            like_ckpt = {
+                k: jax.ShapeDtypeStruct(tuple(m["shape"]),
+                                        np.dtype(m["dtype"]))
+                for k, m in leaves.items()}
+            tree, extra = ckpt.restore(self.ckpt_dir, like_ckpt, step=step)
+            if split_ckpt:
+                src = VocabPlacement.from_extra(extra["vocab_shard"])
+                full_in = src.merge(tree["hot_in"], tree["cold_in"])
+                full_out = src.merge(tree["hot_out"], tree["cold_out"])
+            else:
+                full_in = np.asarray(tree["w_in"])
+                full_out = np.asarray(tree["w_out"])
+            # restoring through like_ckpt skipped restore()'s shape check
+            # against *this* session — validate before training reads rows
+            # out of range (jax clamps gathers: silent corruption)
+            v_expect = (self.placement.vocab_size
+                        if self.placement is not None
+                        else int(self.state.w_in.shape[0]))
+            want = (v_expect, self.cfg.dim)
+            if full_in.shape != want:
+                raise ValueError(
+                    f"checkpoint tables are {full_in.shape}, session "
+                    f"expects {want} (vocabulary or dim mismatch — wrong "
+                    f"ckpt_dir?)")
+            if self.placement is not None:
+                hot_in, cold_in = self.placement.split(full_in)
+                hot_out, cold_out = self.placement.split(full_out)
+                put = _cold_put(self.mesh, cold_in.shape[0])
+                tree = {"hot_in": jnp.asarray(hot_in),
+                        "hot_out": jnp.asarray(hot_out),
+                        "cold_in": put(cold_in), "cold_out": put(cold_out)}
+            else:
+                tree = {"w_in": jnp.asarray(full_in),
+                        "w_out": jnp.asarray(full_out)}
+        if self.placement is not None:
+            self.state.w_in = tree["hot_in"]
+            self.state.w_out = tree["hot_out"]
+            self.state.cold_in = tree["cold_in"]
+            self.state.cold_out = tree["cold_out"]
+        else:
+            self.state.w_in = tree["w_in"]
+            self.state.w_out = tree["w_out"]
+        return extra
 
     def _maybe_resume(self) -> None:
         from repro.train import checkpoint as ckpt
         step = ckpt.latest_step(self.ckpt_dir)
         if step is None:
             return
-        like = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
-                for k, v in self.state.params().items()}
-        tree, extra = ckpt.restore(self.ckpt_dir, like, step=step)
-        self.state.w_in = tree["w_in"]
-        self.state.w_out = tree["w_out"]
+        extra = self._restore_tables(step)
         self.state.words_seen = int(extra.get("words_seen", 0))
         self.state.batches_seen = int(extra.get("batches_seen", step))
         cursor = ckpt.PipelineCursor.from_extra(extra)
@@ -353,6 +530,11 @@ class TrainSession:
 
     # -- inference helpers ----------------------------------------------------
     def embeddings(self) -> np.ndarray:
+        """The input embedding table ``(V, d)``; vocab-sharded sessions
+        reassemble it from the hot replica + cold shards."""
+        if self.placement is not None:
+            return self.placement.merge(np.asarray(self.state.w_in),
+                                        np.asarray(self.state.cold_in))
         return np.asarray(self.state.w_in)
 
     def nearest(self, word_id: int, k: int = 5) -> np.ndarray:

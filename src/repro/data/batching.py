@@ -62,6 +62,19 @@ def negatives_rng(seed: int, epoch: int, batch_index: int
         np.random.SeedSequence([seed, _NEGATIVES_TAG, epoch, batch_index]))
 
 
+def first_seen_unique(flat: np.ndarray) -> np.ndarray:
+    """Distinct values of ``flat`` in first-occurrence order.
+
+    The same dedup rule :func:`plan_tiles` applies to a window tile's
+    output slots, exposed for callers that dedup at other granularities —
+    the vocab-sharding exchange planner applies it per mesh shard
+    (``distributed.vocab_placement.plan_exchange``) so each shard's working
+    table lays rows out in the order its sentences first touch them.
+    """
+    _, idx = np.unique(flat, return_index=True)
+    return flat[np.sort(idx)]
+
+
 def encode_block(vocab: Vocab, sentences: Sequence[Sequence],
                  subsample_t: float, rng: np.random.Generator
                  ) -> List[np.ndarray]:

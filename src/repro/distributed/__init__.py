@@ -3,6 +3,14 @@ from repro.distributed.sharding import (
     constrain,
     current_rules,
     param_shardings,
+    vocab_shard_sharding,
+)
+from repro.distributed.vocab_placement import (
+    VocabExchange,
+    VocabPlacement,
+    plan_exchange,
 )
 
-__all__ = ["axis_rules", "constrain", "current_rules", "param_shardings"]
+__all__ = ["axis_rules", "constrain", "current_rules", "param_shardings",
+           "vocab_shard_sharding", "VocabExchange", "VocabPlacement",
+           "plan_exchange"]

@@ -38,6 +38,10 @@ DEFAULT_RULES: Dict[str, Tuple[MeshAxes, ...]] = {
     "experts":   ("model",),
     "capacity":  (("pod", "data"), ("data",)),
     "vocab":     ("model",),
+    # W2V cold-tail embedding rows (hot head replicated): shard over data —
+    # the vocab-scaling axis of distributed.vocab_placement (DESIGN.md §8).
+    # "data" only: the W2V step's collectives run over that one axis name.
+    "cold_vocab": (("data",),),
     "fsdp":      (("pod", "data"), ("data",)),
     "ssm_heads": ("model",),
     "inner":     ("model",),                     # mamba d_inner
@@ -133,6 +137,15 @@ class Rules:
                  allow_uneven: bool = True) -> NamedSharding:
         return NamedSharding(self.mesh,
                              self.spec(logical_axes, shape, allow_uneven))
+
+
+def vocab_shard_sharding(mesh: Mesh, cold_pad: int) -> NamedSharding:
+    """NamedSharding for a W2V cold-tail embedding table ``(cold_pad, d)``:
+    rows over the ``data`` axis per the ``cold_vocab`` rule. The trainer
+    places the cold tables with this so the ``shard_map`` step's
+    ``P("data")`` in_spec finds them already distributed."""
+    axes = Rules(mesh).resolve("cold_vocab", cold_pad, allow_uneven=False)
+    return NamedSharding(mesh, P(axes))
 
 
 _ACTIVE: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(

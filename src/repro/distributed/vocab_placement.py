@@ -1,0 +1,293 @@
+"""Vocabulary placement: replicated hot head + mesh-sharded cold tail.
+
+FULL-W2V's reuse hierarchy keeps hot rows near the compute (registers /
+shared memory in the paper; ring buffer / tile dedup here) and spills cold
+rows to HBM. This module extends the same hierarchy one level up — across
+the *mesh*: the Zipf-hot head of the vocabulary (top-K rows by corpus
+frequency, covering ~90% of token occurrences) is replicated on every
+device, while the cold tail is sharded over the ``data`` axis, so trainable
+vocabulary scales with device count instead of being capped by one device's
+HBM (DESIGN.md §8; the hybrid replicate/shard strategy of Ji et al.,
+arXiv:1604.04661).
+
+Two host-side artifacts:
+
+* :class:`VocabPlacement` — the static placement: hot size, shard count,
+  striped ownership of cold rows, and the split/merge permutations between
+  the replicated ``(V, d)`` layout and the ``hot + sharded-cold`` layout.
+* :func:`plan_exchange` — the per-batch exchange plan: for each mesh shard,
+  the *distinct* cold rows its sentences touch (the same first-seen dedup
+  rule ``plan_tiles`` applies per window tile, applied per shard —
+  ``data.batching.first_seen_unique``) plus token/negative/plan index
+  arrays remapped into the shard's compact working-table space. The device
+  step then all-gathers O(distinct rows), never O(V).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+# Default Zipf coverage of the replicated hot head: the smallest frequency-
+# ranked prefix whose occurrence mass reaches this fraction is replicated.
+VOCAB_HOT_COVERAGE = 0.9
+
+# Per-shard exchange lists are padded up to a multiple of this, so the jit
+# cache sees a handful of request widths per run instead of one per batch.
+_REQUEST_PAD = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class VocabPlacement:
+    """Static hot/cold placement of a ``(V, d)`` embedding table.
+
+    Rows ``[0, hot)`` (the vocabulary is frequency-sorted by construction,
+    ``data.vocab.Vocab.build``) are replicated on every shard. Cold rows
+    ``[hot, V)`` are striped over ``n_shards``: cold index ``c = id - hot``
+    lives on shard ``c % n_shards`` at local row ``c // n_shards`` — modulo
+    striping, so the Zipf tail's residual skew spreads evenly instead of
+    loading shard 0 with the warmest cold rows.
+    """
+
+    vocab_size: int
+    hot: int
+    n_shards: int
+
+    def __post_init__(self):
+        if not (1 <= self.hot <= self.vocab_size):
+            raise ValueError(
+                f"hot head must satisfy 1 <= hot <= V; got hot={self.hot}, "
+                f"V={self.vocab_size}")
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+
+    # -- derived sizes -------------------------------------------------------
+    @property
+    def cold(self) -> int:
+        """Real cold rows (``V - hot``)."""
+        return self.vocab_size - self.hot
+
+    @property
+    def cold_pad(self) -> int:
+        """Cold rows padded up to a multiple of ``n_shards`` (>= n_shards,
+        so the sharded table is never zero-sized)."""
+        n = self.n_shards
+        return max(n, -(-self.cold // n) * n)
+
+    @property
+    def cold_per_shard(self) -> int:
+        """Local cold rows per shard."""
+        return self.cold_pad // self.n_shards
+
+    @property
+    def rows_per_device(self) -> int:
+        """Embedding rows resident per device: hot replica + cold shard."""
+        return self.hot + self.cold_per_shard
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def plan(cls, counts: np.ndarray, n_shards: int,
+             hot_frac: float = 0.0,
+             coverage: float = VOCAB_HOT_COVERAGE) -> "VocabPlacement":
+        """Choose the hot head for a frequency-sorted vocabulary.
+
+        ``hot_frac > 0`` pins the head to ``round(hot_frac * V)`` rows;
+        otherwise the head is the smallest prefix whose occurrence mass
+        reaches ``coverage`` (under Zipf that is a small fraction of V
+        covering ~90% of token traffic). The head is clamped to ``[1,
+        V - 1]`` so there is always at least one cold row to shard.
+        """
+        counts = np.asarray(counts)
+        v = int(counts.size)
+        if v < 2:
+            raise ValueError(f"vocab too small to shard (V={v})")
+        if hot_frac > 0.0:
+            hot = int(round(hot_frac * v))
+        else:
+            mass = np.cumsum(counts, dtype=np.float64)
+            total = float(mass[-1]) or 1.0
+            hot = int(np.searchsorted(mass, coverage * total) + 1)
+        hot = max(1, min(hot, v - 1))
+        return cls(vocab_size=v, hot=hot, n_shards=int(n_shards))
+
+    # -- ownership -----------------------------------------------------------
+    def owner_of(self, ids: np.ndarray) -> np.ndarray:
+        """Owning shard per id (-1 for hot/replicated ids)."""
+        ids = np.asarray(ids)
+        return np.where(ids >= self.hot, (ids - self.hot) % self.n_shards,
+                        -1)
+
+    def local_row(self, ids: np.ndarray) -> np.ndarray:
+        """Local row index on the owning shard (0 for hot ids)."""
+        ids = np.asarray(ids)
+        return np.where(ids >= self.hot, (ids - self.hot) // self.n_shards,
+                        0)
+
+    def _perm(self) -> np.ndarray:
+        """Padded cold index -> position in the shard-major cold table."""
+        ci = np.arange(self.cold_pad)
+        return (ci % self.n_shards) * self.cold_per_shard + \
+            (ci // self.n_shards)
+
+    # -- layout conversion ---------------------------------------------------
+    def split(self, full: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """``(V, d)`` table -> (hot replica ``(hot, d)``, shard-major cold
+        table ``(cold_pad, d)``; rows ``[i*cps, (i+1)*cps)`` belong to shard
+        i). Padding rows are zero. Exact inverse of :meth:`merge`."""
+        full = np.asarray(full)
+        if full.shape[0] != self.vocab_size:
+            raise ValueError(f"table has {full.shape[0]} rows, placement "
+                             f"expects V={self.vocab_size}")
+        cold_arr = np.zeros((self.cold_pad,) + full.shape[1:], full.dtype)
+        ci = np.arange(self.cold)
+        cold_arr[self._perm()[:self.cold]] = full[self.hot + ci]
+        return full[:self.hot].copy(), cold_arr
+
+    def merge(self, hot: np.ndarray, cold: np.ndarray) -> np.ndarray:
+        """Reassemble the replicated ``(V, d)`` table from split parts."""
+        hot, cold = np.asarray(hot), np.asarray(cold)
+        if hot.shape[0] != self.hot or cold.shape[0] != self.cold_pad:
+            raise ValueError(
+                f"split shapes ({hot.shape[0]}, {cold.shape[0]}) do not "
+                f"match placement (hot={self.hot}, cold_pad={self.cold_pad})")
+        full = np.empty((self.vocab_size,) + hot.shape[1:], hot.dtype)
+        full[:self.hot] = hot
+        full[self.hot:] = cold[self._perm()[:self.cold]]
+        return full
+
+    # -- checkpoint metadata -------------------------------------------------
+    def to_extra(self) -> Dict[str, int]:
+        """Serializable placement metadata stored with split checkpoints."""
+        return {"vocab_size": self.vocab_size, "hot": self.hot,
+                "n_shards": self.n_shards}
+
+    @classmethod
+    def from_extra(cls, extra: Dict[str, Any]) -> "VocabPlacement":
+        """Rebuild the placement a checkpoint was written under."""
+        return cls(vocab_size=int(extra["vocab_size"]),
+                   hot=int(extra["hot"]), n_shards=int(extra["n_shards"]))
+
+
+@dataclasses.dataclass
+class VocabExchange:
+    """One batch's exchange plan: remapped index arrays + request lists.
+
+    ``tokens``/``negs`` (and ``plan_uniq`` when the batch carries a window-
+    tile plan) are rewritten into each shard's *working-table* index space:
+    hot ids keep their global index (the hot head is the working table's
+    prefix), and the shard's r-th distinct cold id maps to ``hot + r``. The
+    device step reassembles exactly this working table — hot replica rows
+    followed by the gathered cold rows, in request order — so the kernels
+    run unchanged on a compact ``(hot + R, d)`` table.
+
+    ``cold_ids[s]`` lists shard s's distinct cold ids (first-seen order,
+    -1 padded to the common width R).
+    """
+
+    placement: VocabPlacement
+    tokens: np.ndarray                     # (S, L) int32, remapped
+    negs: np.ndarray                       # (S, L, N) int32, remapped
+    lengths: np.ndarray                    # (S,) int32 (unchanged)
+    cold_ids: np.ndarray                   # (n_shards, R) int32, -1 padded
+    n_distinct: List[int]                  # real request count per shard
+    plan_uniq: Optional[np.ndarray] = None     # remapped tile plan rows
+    plan_scatter: Optional[np.ndarray] = None  # (unchanged)
+    plan_ucount: Optional[np.ndarray] = None
+    plan_strict: Optional[np.ndarray] = None
+
+    @property
+    def request_width(self) -> int:
+        """R — padded distinct-cold-rows-per-shard this batch."""
+        return int(self.cold_ids.shape[1])
+
+    def bytes_exchanged(self, dim: int, itemsize: int = 4) -> int:
+        """Per-step *payload* volume: each distinct cold row crosses the
+        interconnect twice per table (value gather + update write-back),
+        for both ``w_in`` and ``w_out`` — O(distinct rows), never O(V).
+        The dense collectives the step currently uses move ~n_shards×
+        this many bytes per device (DESIGN.md §8 exchange-volume note);
+        ``benchmarks/bench_memory.py`` reports the n-inclusive figure."""
+        return sum(self.n_distinct) * dim * itemsize * 2 * 2
+
+    def step_inputs(self, lr) -> "Any":
+        """Lift onto the device as a vocab-sharded ``StepInputs``."""
+        import jax.numpy as jnp
+
+        from repro.kernels.registry import StepInputs
+        kw = {}
+        if self.plan_uniq is not None:
+            kw = dict(plan_uniq=jnp.asarray(self.plan_uniq),
+                      plan_scatter=jnp.asarray(self.plan_scatter),
+                      plan_ucount=jnp.asarray(self.plan_ucount),
+                      plan_strict=jnp.asarray(self.plan_strict))
+        return StepInputs(tokens=jnp.asarray(self.tokens),
+                          negs=jnp.asarray(self.negs),
+                          lengths=jnp.asarray(self.lengths),
+                          lr=jnp.asarray(lr, jnp.float32),
+                          cold_ids=jnp.asarray(self.cold_ids), **kw)
+
+
+def plan_exchange(batch, placement: VocabPlacement) -> VocabExchange:
+    """Build the per-shard row-exchange plan for one host batch.
+
+    For each of the ``n_shards`` sentence shards (contiguous row blocks of
+    the batch, matching the ``P("data")`` sharding the trainer applies),
+    collect the distinct cold ids its tokens, negatives, and tile-plan rows
+    touch — first-seen order, the ``plan_tiles`` dedup rule lifted from one
+    window tile to a whole shard — and remap every index array into the
+    shard's compact working-table space.
+    """
+    from repro.data.batching import first_seen_unique
+
+    n = placement.n_shards
+    hot = placement.hot
+    s_total = batch.tokens.shape[0]
+    if s_total % n != 0:
+        raise ValueError(
+            f"batch of {s_total} sentences does not shard over {n} devices; "
+            f"set cfg.sentences_per_batch to a multiple of the data axis")
+    per = s_total // n
+
+    tokens = batch.tokens.copy()
+    negs = batch.negs.copy()
+    plan = batch.plan
+    uniq = plan.uniq.copy() if plan is not None else None
+
+    lists: List[np.ndarray] = []
+    for s in range(n):
+        sl = slice(s * per, (s + 1) * per)
+        parts = [tokens[sl].ravel(), negs[sl].ravel()]
+        if uniq is not None:
+            parts.append(uniq[sl].ravel())
+        flat = np.concatenate(parts)
+        lists.append(first_seen_unique(flat[flat >= hot]).astype(np.int64))
+
+    width = max(max((len(li) for li in lists), default=0), 1)
+    width = -(-width // _REQUEST_PAD) * _REQUEST_PAD
+    cold_ids = np.full((n, width), -1, dtype=np.int32)
+
+    # one shared remap table, patched per shard with only that shard's
+    # request list (O(distinct) per shard, not O(V)): hot ids map to
+    # themselves; unseen cold ids map to 0 (a hot row) — they never occur
+    # in the shard's arrays by construction, so any hit means a planner
+    # bug, which the bit-parity tests would surface immediately
+    remap = np.arange(placement.vocab_size, dtype=np.int32)
+    remap[hot:] = 0
+    for s, li in enumerate(lists):
+        sl = slice(s * per, (s + 1) * per)
+        cold_ids[s, :len(li)] = li
+        remap[li] = hot + np.arange(len(li), dtype=np.int32)
+        tokens[sl] = remap[tokens[sl]]
+        negs[sl] = remap[negs[sl]]
+        if uniq is not None:
+            uniq[sl] = remap[uniq[sl]]
+        remap[li] = 0   # restore for the next shard
+
+    kw = {}
+    if plan is not None:
+        kw = dict(plan_uniq=uniq, plan_scatter=plan.scatter,
+                  plan_ucount=plan.ucount, plan_strict=plan.strict)
+    return VocabExchange(placement=placement, tokens=tokens, negs=negs,
+                         lengths=batch.lengths, cold_ids=cold_ids,
+                         n_distinct=[len(li) for li in lists], **kw)

@@ -21,6 +21,12 @@ Registered backends:
 * ``pallas_interpret`` / ``pallas_tiled_interpret`` — the same kernels
   under ``interpret=True``: the kernel body executes in Python — identical
   semantics, correctness-only speed. What CI runs in this container.
+
+Besides :func:`sgns_update` (single replica) this module provides
+:func:`vocab_sharded_update` — the same backends run unchanged on the
+compact working table of a vocab-sharded step (DESIGN.md §8), wrapped in
+the gather / write-back exchange that keeps per-step traffic proportional
+to distinct rows, not vocabulary size.
 """
 from __future__ import annotations
 
@@ -91,12 +97,17 @@ def _update_pallas_tiled_interpret(w_in, w_out, step, static):
 register(KernelBackend(
     name="jnp", update=_update_jnp,
     description="compiled jnp oracle (kernels.ref.batch_sgns_ref)",
-    supports_tiling=True, tiled_variant="jnp_tiled"))
+    supports_tiling=True, supports_vocab_shard=True,
+    tiled_variant="jnp_tiled"))
 register(KernelBackend(
     name="pallas", update=_update_pallas,
     description="sequential Pallas kernel (TPU-native)",
-    requires_tpu=True, supports_tiling=True, tiled_variant="pallas_tiled",
-    interpret_variant="pallas_interpret"))
+    requires_tpu=True, supports_tiling=True, supports_vocab_shard=True,
+    tiled_variant="pallas_tiled", interpret_variant="pallas_interpret"))
+# pallas_pipelined opts OUT of vocab sharding: its §3.1 prefetch exists to
+# hide HBM row latency, but a vocab-sharded step hands the kernel a compact
+# VMEM-sized working table — prefetch buys nothing there, so the capable
+# variant is plain `pallas` (and "auto" resolves to it).
 register(KernelBackend(
     name="pallas_pipelined", update=_update_pallas_pipelined,
     description="sequential Pallas kernel with §3.1 prefetch (TPU-native)",
@@ -105,20 +116,21 @@ register(KernelBackend(
 register(KernelBackend(
     name="pallas_interpret", update=_update_pallas_interpret,
     description="sequential Pallas kernel, interpret mode (any platform)",
-    supports_tiling=True, tiled_variant="pallas_tiled_interpret"))
+    supports_tiling=True, supports_vocab_shard=True,
+    tiled_variant="pallas_tiled_interpret"))
 register(KernelBackend(
     name="jnp_tiled", update=_update_jnp_tiled,
     description="window-tiled jnp oracle (kernels.ref.batch_sgns_tiled_ref)",
-    needs_plan=True))
+    needs_plan=True, supports_vocab_shard=True))
 register(KernelBackend(
     name="pallas_tiled", update=_update_pallas_tiled,
     description="window-tiled Pallas kernel (TPU-native, DESIGN.md §4)",
-    needs_plan=True, requires_tpu=True,
+    needs_plan=True, requires_tpu=True, supports_vocab_shard=True,
     interpret_variant="pallas_tiled_interpret"))
 register(KernelBackend(
     name="pallas_tiled_interpret", update=_update_pallas_tiled_interpret,
     description="window-tiled Pallas kernel, interpret mode (any platform)",
-    needs_plan=True))
+    needs_plan=True, supports_vocab_shard=True))
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +176,111 @@ def sgns_update(
     fused per step, DESIGN.md §4; bit-identical to sequential at T=1), a
     plain step the sequential family. Tile size and GEMM grouping are
     static, derived from the plan shape and ``cfg.tile_gemm_windows``.
+
+    Steps carrying a vocab-sharding exchange plan (``step.cold_ids``) are
+    rejected here: their index arrays are remapped into per-shard working-
+    table space and only mean anything under a mesh session
+    (``TrainSession(mesh=..., cfg.vocab_shard=True)`` →
+    :func:`vocab_sharded_update` under ``shard_map``).
     """
+    if step.has_vocab_shard:
+        raise ValueError(
+            "StepInputs carries a vocab-sharding exchange plan (cold_ids); "
+            "sgns_update is the single-replica entry point. Run the step "
+            "through a mesh TrainSession with cfg.vocab_shard=True, or "
+            "build the step without plan_exchange.")
     be = registry.resolve(backend, tiled=step.has_plan)
     return _jitted_update(be.name, static_for(cfg, step.tile))(
         w_in, w_out, step)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded update (DESIGN.md §8): hot replica + cold shard exchange
+# ---------------------------------------------------------------------------
+
+def vocab_sharded_update(backend: str, static: KernelStatic, placement,
+                         axis_name: str = "data"):
+    """The per-shard update for vocab-sharded tables, to run under
+    ``shard_map`` over ``axis_name``.
+
+    Signature of the returned function (all arguments are the *local*
+    blocks shard_map hands each device):
+
+        run(hot_in, hot_out, cold_in, cold_out, step)
+            -> (hot_in', hot_out', cold_in', cold_out')
+
+    where ``hot_*`` are the replicated ``(hot, d)`` head tables, ``cold_*``
+    the local ``(cold_per_shard, d)`` shard of the striped cold tail, and
+    ``step`` a :class:`~repro.kernels.registry.StepInputs` built by
+    ``distributed.vocab_placement.plan_exchange`` (token/negative/plan ids
+    remapped to working-table space, ``cold_ids`` = per-shard request
+    lists).
+
+    One step does, entirely on-device (DESIGN.md §8 exchange math):
+
+    1. **Gather** — all-gather the request lists (ints, O(n·R)), serve the
+       rows this shard owns, and ``psum_scatter`` so every shard receives
+       the values of exactly its R requested rows: O(R·d) per shard, never
+       O(V).
+    2. **Compute** — run the resolved backend *unchanged* on the compact
+       working table ``concat(hot, gathered)`` of ``hot + R`` rows.
+    3. **Write back** — pmean the hot head across shards (Hogwild
+       averaging, identical to the replicated path); all-gather the R
+       updated request rows and scatter-add them into the owner shards,
+       averaging each touched row over all ``n`` replicas' contributions
+       (untouched replicas contribute the pre-step value, which the owner
+       reconstructs locally — see DESIGN.md §8 for the tolerance this
+       implies vs. the replicated path).
+    """
+    be = registry.get(backend)
+    if not be.supports_vocab_shard:
+        raise ValueError(
+            f"backend {backend!r} does not support vocab-sharded tables; "
+            f"resolve with vocab_shard=True to get an actionable choice")
+    hot = placement.hot
+    cps = placement.cold_per_shard
+    n = placement.n_shards
+
+    def run(hot_in, hot_out, cold_in, cold_out, step: StepInputs):
+        me = jax.lax.axis_index(axis_name)
+        ids_all = jax.lax.all_gather(step.cold_ids[0], axis_name)  # (n, R)
+        valid = ids_all >= 0
+        ci = jnp.where(valid, ids_all - hot, 0)
+        mine = valid & (ci % n == me)
+        lidx = jnp.where(mine, ci // n, 0)                         # (n, R)
+
+        def gather(cold):
+            served = jnp.where(mine[..., None], cold[lidx], 0.0)   # (n,R,d)
+            return jax.lax.psum_scatter(
+                served, axis_name, scatter_dimension=0, tiled=True)[0]
+
+        got_in, got_out = gather(cold_in), gather(cold_out)        # (R, d)
+        w_in_work = jnp.concatenate([hot_in, got_in], axis=0)
+        w_out_work = jnp.concatenate([hot_out, got_out], axis=0)
+
+        new_in, new_out = be.update(w_in_work, w_out_work, step, static)
+
+        hot_in_new = jax.lax.pmean(new_in[:hot], axis_name)
+        hot_out_new = jax.lax.pmean(new_out[:hot], axis_name)
+
+        # owner-side scatter: sum the updated replicas of each touched row,
+        # add (n - k) copies of the pre-step value for the replicas that
+        # never requested it, divide by n — the Hogwild mean
+        tgt = jnp.where(mine, lidx, cps).reshape(-1)     # cps -> dropped
+        kcnt = jnp.zeros((cps,), jnp.float32).at[tgt].add(
+            mine.reshape(-1).astype(jnp.float32), mode="drop")
+
+        def write_back(cold, new_rows):
+            upd_all = jax.lax.all_gather(new_rows, axis_name)      # (n,R,d)
+            contrib = jnp.where(mine[..., None], upd_all, 0.0)
+            acc = jnp.zeros_like(cold).at[tgt].add(
+                contrib.reshape(-1, contrib.shape[-1]), mode="drop")
+            touched = kcnt[:, None] > 0
+            return jnp.where(
+                touched, (acc + (n - kcnt)[:, None] * cold) / n, cold)
+
+        cold_in_new = write_back(cold_in, new_in[hot:])
+        cold_out_new = write_back(cold_out, new_out[hot:])
+        return hot_in_new, hot_out_new, cold_in_new, cold_out_new
+
+    return run

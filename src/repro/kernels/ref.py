@@ -45,6 +45,10 @@ def sentence_sgns_ref(
     lr: jax.Array,        # scalar f32
     w_f: int,
 ) -> Tuple[jax.Array, jax.Array]:
+    """One sentence of the sequential FULL-W2V schedule: ring-buffer
+    context reuse (§3.2) + shared-negative window GEMMs (§3.1), exactly as
+    the module docstring lays out. The oracle the Pallas kernels are
+    tested against."""
     L, N = negs.shape
     V, d = w_in.shape
     r = 2 * w_f + 1

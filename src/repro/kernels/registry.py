@@ -35,7 +35,12 @@ class StepInputs:
     """Device inputs for one training step (a pytree: passes through jit
     and shard_map directly). ``plan_*`` carry the host tile schedule
     (``repro.data.batching.plan_tiles``) and are all-or-none: present for
-    the window-tiled backends, ``None`` for the sequential ones."""
+    the window-tiled backends, ``None`` for the sequential ones.
+    ``cold_ids`` carries the vocab-sharding exchange plan
+    (``repro.distributed.vocab_placement.plan_exchange``): when present,
+    the token/negative/plan arrays are remapped into per-shard working-
+    table space and the step must run under a mesh session
+    (``ops.vocab_sharded_update``), not plain ``sgns_update``."""
     tokens: jax.Array                       # (S, L) int32
     negs: jax.Array                         # (S, L, N) int32
     lengths: jax.Array                      # (S,) int32
@@ -44,10 +49,17 @@ class StepInputs:
     plan_scatter: Optional[jax.Array] = None  # (S, nt, T*(N+1)) int32
     plan_ucount: Optional[jax.Array] = None   # (S, nt) int32
     plan_strict: Optional[jax.Array] = None   # (S, nt) int32
+    cold_ids: Optional[jax.Array] = None      # (n_shards, R) int32, -1 pad
 
     @property
     def has_plan(self) -> bool:
+        """Whether this step carries a host tile schedule (tiled family)."""
         return self.plan_uniq is not None
+
+    @property
+    def has_vocab_shard(self) -> bool:
+        """Whether this step carries a vocab-sharding exchange plan."""
+        return self.cold_ids is not None
 
     @property
     def tile(self) -> int:
@@ -79,7 +91,7 @@ class StepInputs:
 jax.tree_util.register_dataclass(
     StepInputs,
     data_fields=["tokens", "negs", "lengths", "lr", "plan_uniq",
-                 "plan_scatter", "plan_ucount", "plan_strict"],
+                 "plan_scatter", "plan_ucount", "plan_strict", "cold_ids"],
     meta_fields=[])
 
 
@@ -111,6 +123,8 @@ class KernelBackend:
     supports_mesh: bool = True        # usable under shard_map data sharding
     supports_pipeline: bool = False   # §3.1 prefetch (window t+1 DMA overlap)
     supports_tiling: bool = False     # has a window-tiled counterpart
+    supports_vocab_shard: bool = False  # runs on the compact working table
+                                        # of a vocab-sharded step (§8)
     requires_tpu: bool = False        # compiles natively only on TPU
     tiled_variant: Optional[str] = None      # name of the tiled counterpart
     interpret_variant: Optional[str] = None  # interpret-mode escape hatch
@@ -120,6 +134,8 @@ _REGISTRY: Dict[str, KernelBackend] = {}
 
 
 def register(backend: KernelBackend) -> KernelBackend:
+    """Register a kernel backend descriptor; names are unique, first
+    registration wins and re-registration raises."""
     if backend.name in _REGISTRY:
         raise ValueError(f"backend {backend.name!r} already registered")
     _REGISTRY[backend.name] = backend
@@ -134,6 +150,8 @@ def _ensure_registered() -> None:
 
 
 def get(name: str) -> KernelBackend:
+    """Exact-name registry lookup (no "auto"/variant mapping — that is
+    :func:`resolve`); unknown names raise with the registered set listed."""
     _ensure_registered()
     try:
         return _REGISTRY[name]
@@ -154,26 +172,33 @@ def cli_choices() -> List[str]:
     return ["auto"] + names()
 
 
-def resolve(name: str, *, tiled: bool = False,
+def resolve(name: str, *, tiled: bool = False, vocab_shard: bool = False,
             platform: Optional[str] = None) -> KernelBackend:
     """Resolve a backend name against the registry for this step shape.
 
     * ``"auto"`` picks the fastest native backend for ``platform``
       (default: the running jax backend): Pallas on TPU (pipelined for the
-      sequential path), the compiled jnp oracle elsewhere.
+      sequential path), the compiled jnp oracle elsewhere. With
+      ``vocab_shard=True`` the TPU sequential pick is plain ``pallas``
+      (the pipelined kernel opts out of vocab sharding, see below).
     * A sequential name with ``tiled=True`` maps to its declared
       ``tiled_variant`` (the trainer's T>1 dispatch). ``pallas_pipelined``
       warns on this mapping: the tiled kernel does not implement §3.1
       prefetch, so the request is downgraded — loudly, not silently.
+    * ``vocab_shard=True`` additionally requires the resolved backend to
+      declare ``supports_vocab_shard`` (it will be handed a compact
+      hot+gathered working table instead of the full ``(V, d)`` one).
     * Invalid combinations (a plan-consuming backend without a plan, a
-      TPU-only backend off-TPU, an unknown name) raise ``ValueError`` with
-      the fix spelled out.
+      TPU-only backend off-TPU, a vocab-shard-incapable backend on a
+      sharded step, an unknown name) raise ``ValueError`` with the fix
+      spelled out.
     """
     _ensure_registered()
     platform = platform or jax.default_backend()
     if name == "auto":
         if platform == "tpu":
-            name = "pallas_tiled" if tiled else "pallas_pipelined"
+            name = ("pallas_tiled" if tiled else
+                    "pallas" if vocab_shard else "pallas_pipelined")
         else:
             name = "jnp_tiled" if tiled else "jnp"
     be = get(name)
@@ -199,6 +224,14 @@ def resolve(name: str, *, tiled: bool = False,
             f"attaches a plan (repro.data.batching.plan_tiles), or use a "
             f"sequential backend: "
             f"{', '.join(n for n in _REGISTRY if not _REGISTRY[n].needs_plan)}")
+    if vocab_shard and not be.supports_vocab_shard:
+        capable = ', '.join(n for n in _REGISTRY
+                            if _REGISTRY[n].supports_vocab_shard)
+        raise ValueError(
+            f"backend {be.name!r} does not support vocab-sharded tables "
+            f"(it would be handed a compact hot+gathered working table, "
+            f"not the full (V, d) one); set cfg.vocab_shard=False or pick "
+            f"one of: {capable}")
     if be.requires_tpu and platform != "tpu":
         hint = (f"use {be.interpret_variant!r} (interpret mode: identical "
                 f"semantics, correctness-only speed) or "

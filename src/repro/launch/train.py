@@ -40,7 +40,9 @@ def run_w2v(args) -> int:
                     pad_len=args.pad_len,
                     prefetch_workers=args.prefetch_workers,
                     prefetch_depth=args.prefetch_depth,
-                    prefetch_mode=args.prefetch_mode)
+                    prefetch_mode=args.prefetch_mode,
+                    vocab_shard=args.vocab_shard,
+                    hot_vocab_frac=args.hot_vocab_frac)
     words_per_cluster = max(args.vocab // args.clusters, 1)
     corpus = synthetic_cluster_corpus(
         n_clusters=args.clusters, words_per_cluster=words_per_cluster,
@@ -58,6 +60,11 @@ def run_w2v(args) -> int:
                            ckpt_dir=args.ckpt_dir,
                            ckpt_every=args.ckpt_every)
     print(f"backend={trainer.backend}")
+    if trainer.placement is not None:
+        p = trainer.placement
+        print(f"vocab_shard: hot={p.hot} cold={p.cold} shards={p.n_shards} "
+              f"rows/device={p.rows_per_device} "
+              f"(replicated would be {p.vocab_size})")
     if trainer.resumed_step is not None:
         print(f"resumed from checkpoint batch {trainer.resumed_step} "
               f"({trainer.state.words_seen:,} words seen)")
@@ -137,6 +144,15 @@ def main() -> int:
                    choices=("thread", "process"),
                    help="worker kind: threads (numpy finalize releases the "
                         "GIL) or processes (python-heavy encode)")
+    w.add_argument("--vocab-shard", action="store_true",
+                   help="replicate the Zipf-hot vocabulary head and shard "
+                        "the cold tail over the mesh data axis "
+                        "(DESIGN.md §8); scales trainable vocabulary with "
+                        "device count")
+    w.add_argument("--hot-vocab-frac", type=float, default=0.0,
+                   help="replicated hot head as a fraction of V "
+                        "(0: smallest prefix covering ~90%% of corpus "
+                        "occurrences)")
     # choices come from the backend registry, so every registered kernel
     # variant — pipelined, tiled, interpret — is reachable from the CLI
     w.add_argument("--backend", default="auto",

@@ -127,6 +127,25 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def peek(ckpt_dir: str, step: Optional[int] = None
+         ) -> Tuple[Dict[str, Dict], Dict]:
+    """Inspect a checkpoint without loading arrays: leaf metadata
+    (``path -> {shape, dtype}``) plus the ``extra`` dict. Lets callers
+    decide what structure to :func:`restore` into — e.g. the W2V trainer
+    detecting a split-table (vocab-sharded) checkpoint and reassembling it
+    for a replicated session, or vice versa."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = {l["path"]: {"shape": tuple(l["shape"]), "dtype": l["dtype"]}
+              for l in manifest["leaves"]}
+    return leaves, manifest["extra"]
+
+
 def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
             shardings: Any = None, verify: bool = True) -> Tuple[Any, Dict]:
     """Restore into the structure of `tree_like` (arrays or

@@ -102,6 +102,36 @@ def test_descriptors_declare_consistent_capabilities():
             assert tv.needs_plan, (name, be.tiled_variant)
         if be.requires_tpu and be.interpret_variant is not None:
             assert not registry.get(be.interpret_variant).requires_tpu
+        if be.supports_vocab_shard and be.tiled_variant is not None:
+            # T>1 dispatch under a vocab-sharded session must stay capable
+            assert registry.get(be.tiled_variant).supports_vocab_shard
+
+
+def test_double_register_raises():
+    from repro.kernels.registry import KernelBackend, register
+    registry.names()   # force registration
+    with pytest.raises(ValueError, match="already registered"):
+        register(KernelBackend(name="jnp", update=lambda *a: a,
+                               description="dup"))
+
+
+def test_vocab_shard_capability_gating():
+    """resolve(vocab_shard=True) must reject incapable backends with the
+    capable set spelled out, pass capable ones through, and steer 'auto'
+    on TPU to the plain (non-pipelined) Pallas kernel."""
+    with pytest.raises(ValueError, match="supports_vocab_shard|vocab-sh") \
+            as ei:
+        registry.resolve("pallas_pipelined", vocab_shard=True,
+                         platform="tpu")
+    assert "jnp" in str(ei.value)   # names capable alternatives
+    assert registry.resolve("jnp", vocab_shard=True,
+                            platform="cpu").name == "jnp"
+    assert registry.resolve("jnp", tiled=True, vocab_shard=True,
+                            platform="cpu").name == "jnp_tiled"
+    assert registry.resolve("auto", vocab_shard=True,
+                            platform="tpu").name == "pallas"
+    assert registry.resolve("auto", vocab_shard=False,
+                            platform="tpu").name == "pallas_pipelined"
 
 
 # ---------------------------------------------------------------------------

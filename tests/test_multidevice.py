@@ -152,6 +152,97 @@ def test_w2v_mesh_tiled_training_quality(subproc):
     assert "OK" in r.stdout
 
 
+def test_w2v_vocab_shard_mesh_parity(subproc):
+    """Vocab-sharded training on a 4-way data mesh (hot head replicated,
+    cold tail striped over shards, per-step distinct-row exchange) matches
+    the replicated Hogwild path: hot rows bit-identically, cold rows within
+    the DESIGN.md §8 float tolerance — for both the sequential and the
+    window-tiled kernel families. Also checks the per-device cold shard is
+    really ~cold/N rows."""
+    r = subproc("""
+        import numpy as np, jax
+        assert jax.device_count() == 4
+        from repro.configs.w2v import smoke
+        from repro.data.corpus import synthetic_cluster_corpus
+        from repro.data.batching import BatchingPipeline
+        from repro.core.trainer import TrainSession
+        from repro.launch.mesh import make_host_mesh
+
+        corpus = synthetic_cluster_corpus(n_clusters=8, words_per_cluster=16,
+                                          n_sentences=400, mean_len=12,
+                                          seed=0)
+        mesh = make_host_mesh(model=1)
+        for tw in (1, 4):
+            cfg = smoke(dim=32, sentences_per_batch=64, tile_windows=tw)
+            cfg_vs = smoke(dim=32, sentences_per_batch=64, tile_windows=tw,
+                           vocab_shard=True, hot_vocab_frac=0.25)
+            pipe = BatchingPipeline(corpus, cfg)
+            pipe_vs = BatchingPipeline(corpus, cfg_vs, vocab=pipe.vocab)
+            a = TrainSession(pipe, cfg, backend="jnp", mesh=mesh)
+            b = TrainSession(pipe_vs, cfg_vs, backend="jnp", mesh=mesh)
+            a.train(max_batches=4)
+            b.train(max_batches=4)
+            pl = b.placement
+            assert pl.n_shards == 4
+            assert pl.cold_per_shard == -(-pl.cold // 4)
+            ea, eb = a.embeddings(), b.embeddings()
+            assert (ea[:pl.hot] == eb[:pl.hot]).all(), "hot head diverged"
+            np.testing.assert_allclose(ea[pl.hot:], eb[pl.hot:],
+                                       atol=1e-6, rtol=1e-5)
+            print(f"OK T={tw} hot={pl.hot} cold/dev={pl.cold_per_shard}",
+                  float(np.abs(ea[pl.hot:] - eb[pl.hot:]).max()))
+    """, n_devices=4)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK T=1" in r.stdout and "OK T=4" in r.stdout
+
+
+def test_w2v_vocab_shard_mesh_checkpoint_to_replicated(subproc):
+    """A split-table checkpoint written on a 4-shard mesh restores into a
+    single-device replicated session with identical embeddings."""
+    r = subproc("""
+        import numpy as np, jax, tempfile
+        assert jax.device_count() == 4
+        from repro.configs.w2v import smoke
+        from repro.data.corpus import synthetic_cluster_corpus
+        from repro.data.batching import BatchingPipeline
+        from repro.core.trainer import TrainSession
+        from repro.launch.mesh import make_host_mesh
+
+        corpus = synthetic_cluster_corpus(n_clusters=8, words_per_cluster=16,
+                                          n_sentences=400, mean_len=12,
+                                          seed=0)
+        cfg_vs = smoke(dim=32, sentences_per_batch=64, vocab_shard=True,
+                       hot_vocab_frac=0.25, epochs=2)
+        d = tempfile.mkdtemp()
+        pipe = BatchingPipeline(corpus, cfg_vs)
+        s1 = TrainSession(pipe, cfg_vs, backend="jnp",
+                          mesh=make_host_mesh(model=1), ckpt_dir=d,
+                          ckpt_every=2)
+        s1.train(max_batches=2)
+        cfg = smoke(dim=32, sentences_per_batch=64, epochs=2)
+        s2 = TrainSession(BatchingPipeline(corpus, cfg, vocab=pipe.vocab),
+                          cfg, backend="jnp", ckpt_dir=d)
+        assert s2.resumed_step == 2 and s2.placement is None
+        np.testing.assert_array_equal(s1.embeddings(), s2.embeddings())
+
+        # regression: restore the 4-shard checkpoint into a 2-shard
+        # session whose split shapes COINCIDE (V=128, hot=32, cold=96:
+        # cold_pad 96 for both) but whose stripe layouts differ — the
+        # restore must re-split through the placements, not copy raw
+        s3 = TrainSession(BatchingPipeline(corpus, cfg_vs,
+                                           vocab=pipe.vocab),
+                          cfg_vs, backend="jnp",
+                          mesh=make_host_mesh(model=2), ckpt_dir=d)
+        assert s3.placement.n_shards == 2
+        assert (s3.placement.cold_pad == s1.placement.cold_pad
+                and s3.placement.hot == s1.placement.hot)
+        np.testing.assert_array_equal(s1.embeddings(), s3.embeddings())
+        print("OK ckpt")
+    """, n_devices=4)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK ckpt" in r.stdout
+
+
 def test_small_mesh_dryrun_train_and_serve(subproc):
     """build_cell lowers + compiles on an 8-device (2,2,2) pod mesh for a
     reduced arch — the same code path as the 512-device production run."""

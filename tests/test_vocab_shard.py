@@ -1,0 +1,304 @@
+"""Vocab-sharded embedding tables (DESIGN.md §8): placement math, exchange
+planning, single-device parity with the replicated path, split-table
+checkpoints, and engine capability gating. Multi-device parity lives in
+``test_multidevice.py`` (subprocess meshes)."""
+import numpy as np
+import pytest
+
+from repro.configs.w2v import smoke
+from repro.data.batching import BatchingPipeline, first_seen_unique
+from repro.data.corpus import synthetic_cluster_corpus
+from repro.distributed.vocab_placement import (VocabPlacement, plan_exchange)
+
+
+# ---------------------------------------------------------------------------
+# Placement math
+# ---------------------------------------------------------------------------
+
+def test_plan_hot_head_covers_requested_mass():
+    counts = np.array([100, 50, 25, 12, 6, 3, 2, 1, 1])  # Zipf-ish, sorted
+    pl = VocabPlacement.plan(counts, n_shards=2, coverage=0.9)
+    total = counts.sum()
+    assert counts[:pl.hot].sum() >= 0.9 * total
+    assert pl.hot < counts.size  # and the head is minimal: one less misses
+    assert counts[:pl.hot - 1].sum() < 0.9 * total
+
+
+def test_plan_hot_frac_overrides_coverage():
+    counts = np.ones(100, dtype=np.int64)
+    pl = VocabPlacement.plan(counts, n_shards=4, hot_frac=0.25)
+    assert pl.hot == 25
+
+
+def test_plan_clamps_to_leave_cold_rows():
+    counts = np.array([1000, 1, 1])
+    pl = VocabPlacement.plan(counts, n_shards=2, coverage=0.999)
+    assert 1 <= pl.hot <= 2   # never the whole vocabulary
+    assert pl.cold >= 1
+    with pytest.raises(ValueError, match="too small"):
+        VocabPlacement.plan(np.array([5]), n_shards=2)
+
+
+def test_cold_padding_and_per_shard_rows():
+    pl = VocabPlacement(vocab_size=103, hot=3, n_shards=4)
+    assert pl.cold == 100
+    assert pl.cold_pad == 100        # already divisible
+    assert pl.cold_per_shard == 25
+    assert pl.rows_per_device == 28
+    pl2 = VocabPlacement(vocab_size=102, hot=3, n_shards=4)
+    assert pl2.cold_pad == 100       # 99 padded up
+    # degenerate: fewer cold rows than shards still yields one row/shard
+    pl3 = VocabPlacement(vocab_size=4, hot=3, n_shards=4)
+    assert pl3.cold_pad == 4 and pl3.cold_per_shard == 1
+
+
+def test_ownership_is_striped_modulo():
+    pl = VocabPlacement(vocab_size=20, hot=4, n_shards=4)
+    ids = np.arange(20)
+    owner = pl.owner_of(ids)
+    assert (owner[:4] == -1).all()                    # hot: no owner
+    assert (owner[4:] == (ids[4:] - 4) % 4).all()     # striped
+    assert (pl.local_row(ids)[4:] == (ids[4:] - 4) // 4).all()
+
+
+def test_split_merge_roundtrip_exact(rng):
+    pl = VocabPlacement(vocab_size=37, hot=5, n_shards=4)
+    full = rng.normal(size=(37, 8)).astype(np.float32)
+    hot, cold = pl.split(full)
+    assert hot.shape == (5, 8) and cold.shape == (pl.cold_pad, 8)
+    np.testing.assert_array_equal(pl.merge(hot, cold), full)
+    # shard-major layout: shard i's block holds the ids it owns, in order
+    for i in range(4):
+        blk = cold[i * pl.cold_per_shard:(i + 1) * pl.cold_per_shard]
+        owned = [v for v in range(5, 37) if (v - 5) % 4 == i]
+        np.testing.assert_array_equal(blk[:len(owned)], full[owned])
+
+
+def test_placement_extra_roundtrip():
+    pl = VocabPlacement(vocab_size=103, hot=7, n_shards=8)
+    assert VocabPlacement.from_extra(pl.to_extra()) == pl
+
+
+# ---------------------------------------------------------------------------
+# Exchange planning
+# ---------------------------------------------------------------------------
+
+def test_first_seen_unique_order():
+    flat = np.array([7, 3, 7, 9, 3, 1, 9])
+    np.testing.assert_array_equal(first_seen_unique(flat), [7, 3, 9, 1])
+
+
+def _pipeline(tile_windows=1, n_sentences=200):
+    cfg = smoke(dim=16, sentences_per_batch=64, tile_windows=tile_windows)
+    corpus = synthetic_cluster_corpus(n_clusters=6, words_per_cluster=12,
+                                      n_sentences=n_sentences, mean_len=12,
+                                      seed=0)
+    pipe = BatchingPipeline(corpus, cfg)
+    return cfg, pipe
+
+
+@pytest.mark.parametrize("tile_windows", [1, 4])
+def test_plan_exchange_remap_inverts(tile_windows):
+    """Remapped ids, pushed back through the shard's request list, must
+    reproduce the original global ids exactly — for tokens, negatives, and
+    (T>1) tile-plan rows."""
+    cfg, pipe = _pipeline(tile_windows)
+    batch = next(pipe.batches(pad_len=cfg.resolved_pad_len))
+    n = 4
+    pl = VocabPlacement.plan(pipe.vocab.counts, n, hot_frac=0.2)
+    ex = plan_exchange(batch, pl)
+    per = batch.tokens.shape[0] // n
+    for s in range(n):
+        sl = slice(s * per, (s + 1) * per)
+        # working index w maps back to: w itself (hot prefix) or the
+        # shard's w-hot'th requested cold id
+        inv = np.concatenate([np.arange(pl.hot, dtype=np.int64),
+                              ex.cold_ids[s].astype(np.int64)])
+        np.testing.assert_array_equal(inv[ex.tokens[sl]], batch.tokens[sl])
+        np.testing.assert_array_equal(inv[ex.negs[sl]], batch.negs[sl])
+        if tile_windows > 1:
+            np.testing.assert_array_equal(inv[ex.plan_uniq[sl]],
+                                          batch.plan.uniq[sl])
+        # request list: distinct, all cold, -1 padded suffix
+        li = ex.cold_ids[s][ex.cold_ids[s] >= 0]
+        assert len(np.unique(li)) == len(li) == ex.n_distinct[s]
+        assert (li >= pl.hot).all()
+        assert (ex.cold_ids[s][ex.n_distinct[s]:] == -1).all()
+
+
+def test_plan_exchange_rejects_indivisible_batch():
+    cfg, pipe = _pipeline()
+    batch = next(pipe.batches(pad_len=cfg.resolved_pad_len))
+    pl = VocabPlacement.plan(pipe.vocab.counts, 7)
+    with pytest.raises(ValueError, match="multiple of the data axis"):
+        plan_exchange(batch, pl)   # 64 sentences, 7 shards
+
+
+def test_exchange_volume_is_distinct_rows_not_v():
+    cfg, pipe = _pipeline()
+    batch = next(pipe.batches(pad_len=cfg.resolved_pad_len))
+    pl = VocabPlacement.plan(pipe.vocab.counts, 4, hot_frac=0.1)
+    ex = plan_exchange(batch, pl)
+    d = 16
+    assert ex.bytes_exchanged(d) == sum(ex.n_distinct) * d * 4 * 4
+    assert sum(ex.n_distinct) <= 4 * pl.cold  # bounded by touched rows
+
+
+# ---------------------------------------------------------------------------
+# Single-device training parity (the N-device analogue is subprocess-bound
+# and lives in test_multidevice.py)
+# ---------------------------------------------------------------------------
+
+def _train_pair(tile_windows, max_batches=3):
+    from repro.core.trainer import TrainSession
+    cfg, pipe = _pipeline(tile_windows)
+    cfg_vs = smoke(dim=16, sentences_per_batch=64,
+                   tile_windows=tile_windows, vocab_shard=True,
+                   hot_vocab_frac=0.3)
+    pipe_vs = BatchingPipeline(pipe.corpus, cfg_vs, vocab=pipe.vocab)
+    a = TrainSession(pipe, cfg, backend="jnp")
+    b = TrainSession(pipe_vs, cfg_vs, backend="jnp")
+    a.train(max_batches=max_batches)
+    b.train(max_batches=max_batches)
+    return a, b
+
+
+@pytest.mark.parametrize("tile_windows", [1, 4])
+def test_single_device_sharded_training_bit_identical(tile_windows):
+    """On one (simulated) shard the vocab-sharded session — gather, compact
+    working table, kernel, write-back — must be *bit-identical* to the
+    plain replicated session (DESIGN.md §8 parity contract)."""
+    a, b = _train_pair(tile_windows)
+    assert b.placement is not None and b.placement.n_shards == 1
+    np.testing.assert_array_equal(a.embeddings(), b.embeddings())
+    # output table too (merge the split state)
+    full_out = b.placement.merge(np.asarray(b.state.w_out),
+                                 np.asarray(b.state.cold_out))
+    np.testing.assert_array_equal(np.asarray(a.state.w_out), full_out)
+
+
+def test_sharded_session_reports_split_param_tree():
+    _, b = _train_pair(1, max_batches=1)
+    params = b.state.params()
+    assert set(params) == {"hot_in", "hot_out", "cold_in", "cold_out"}
+    assert params["hot_in"].shape[0] == b.placement.hot
+    assert params["cold_in"].shape[0] == b.placement.cold_pad
+
+
+# ---------------------------------------------------------------------------
+# Split-table checkpoints: same-format and cross-format restores
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_sharded_roundtrip(tmp_path):
+    from repro.core.trainer import TrainSession
+    cfg, pipe = _pipeline()
+    cfg_vs = smoke(dim=16, sentences_per_batch=64, vocab_shard=True,
+                   hot_vocab_frac=0.3, epochs=2)
+    d = str(tmp_path / "ckpt")
+    s1 = TrainSession(BatchingPipeline(pipe.corpus, cfg_vs,
+                                       vocab=pipe.vocab),
+                      cfg_vs, backend="jnp", ckpt_dir=d, ckpt_every=2)
+    s1.train(max_batches=4)
+    s2 = TrainSession(BatchingPipeline(pipe.corpus, cfg_vs,
+                                       vocab=pipe.vocab),
+                      cfg_vs, backend="jnp", ckpt_dir=d)
+    assert s2.resumed_step == 4
+    np.testing.assert_array_equal(s1.embeddings(), s2.embeddings())
+    s2.train(max_batches=1)
+    assert s2.state.batches_seen == 5
+
+
+def test_checkpoint_sharded_restores_into_replicated_session(tmp_path):
+    """A split-table checkpoint written by a vocab-sharded run must restore
+    into a plain replicated session with identical embeddings (the
+    demote-to-one-box escape hatch)."""
+    from repro.core.trainer import TrainSession
+    cfg, pipe = _pipeline()
+    cfg_vs = smoke(dim=16, sentences_per_batch=64, vocab_shard=True,
+                   hot_vocab_frac=0.3, epochs=2)
+    d = str(tmp_path / "ckpt")
+    s1 = TrainSession(BatchingPipeline(pipe.corpus, cfg_vs,
+                                       vocab=pipe.vocab),
+                      cfg_vs, backend="jnp", ckpt_dir=d, ckpt_every=2)
+    s1.train(max_batches=2)
+    cfg_rep = smoke(dim=16, sentences_per_batch=64, epochs=2)
+    s2 = TrainSession(BatchingPipeline(pipe.corpus, cfg_rep,
+                                       vocab=pipe.vocab),
+                      cfg_rep, backend="jnp", ckpt_dir=d)
+    assert s2.resumed_step == 2 and s2.placement is None
+    np.testing.assert_array_equal(s1.embeddings(), s2.embeddings())
+    s2.train(max_batches=1)   # and keeps training as a replicated session
+    assert s2.state.batches_seen == 3
+
+
+def test_checkpoint_replicated_restores_into_sharded_session(tmp_path):
+    """The promotion direction: a replicated checkpoint resumes into a
+    vocab-sharded session (split on load)."""
+    from repro.core.trainer import TrainSession
+    cfg, pipe = _pipeline()
+    d = str(tmp_path / "ckpt")
+    s1 = TrainSession(BatchingPipeline(pipe.corpus, cfg, vocab=pipe.vocab),
+                      cfg, backend="jnp", ckpt_dir=d, ckpt_every=2)
+    s1.train(max_batches=2)
+    cfg_vs = smoke(dim=16, sentences_per_batch=64, vocab_shard=True,
+                   hot_vocab_frac=0.3)
+    s2 = TrainSession(BatchingPipeline(pipe.corpus, cfg_vs,
+                                       vocab=pipe.vocab),
+                      cfg_vs, backend="jnp", ckpt_dir=d)
+    assert s2.resumed_step == 2 and s2.placement is not None
+    np.testing.assert_array_equal(s1.embeddings(), s2.embeddings())
+
+
+def test_checkpoint_cross_format_rejects_vocab_mismatch(tmp_path):
+    """The cross-format restore path must still reject a checkpoint whose
+    tables don't fit this session's vocabulary (restore() through the
+    checkpoint's own shapes would otherwise skip that check and training
+    would silently clamp out-of-range rows)."""
+    from repro.core.trainer import TrainSession
+    cfg, pipe = _pipeline()
+    cfg_vs = smoke(dim=16, sentences_per_batch=64, vocab_shard=True,
+                   hot_vocab_frac=0.3, epochs=2)
+    d = str(tmp_path / "ckpt")
+    s1 = TrainSession(BatchingPipeline(pipe.corpus, cfg_vs,
+                                       vocab=pipe.vocab),
+                      cfg_vs, backend="jnp", ckpt_dir=d, ckpt_every=2)
+    s1.train(max_batches=2)
+    bigger = synthetic_cluster_corpus(n_clusters=10, words_per_cluster=30,
+                                      n_sentences=300, mean_len=12, seed=1)
+    cfg_rep = smoke(dim=16, sentences_per_batch=64)
+    big_pipe = BatchingPipeline(bigger, cfg_rep)
+    assert big_pipe.vocab.size != pipe.vocab.size
+    with pytest.raises(ValueError, match="vocabulary or dim mismatch"):
+        TrainSession(big_pipe, cfg_rep, backend="jnp", ckpt_dir=d)
+
+
+# ---------------------------------------------------------------------------
+# Engine gating
+# ---------------------------------------------------------------------------
+
+def test_sgns_update_rejects_vocab_sharded_step(rng):
+    import jax.numpy as jnp
+
+    from repro.configs.w2v import W2VConfig
+    from repro.kernels import ops
+    from repro.kernels.registry import StepInputs
+    from tests.conftest import make_distinct_negs
+    tokens = rng.integers(0, 20, size=(2, 8)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, 20, 3)
+    step = StepInputs(jnp.asarray(tokens), jnp.asarray(negs),
+                      jnp.asarray(np.array([8, 8], np.int32)),
+                      jnp.float32(0.05),
+                      cold_ids=jnp.zeros((1, 8), jnp.int32))
+    with pytest.raises(ValueError, match="mesh TrainSession"):
+        ops.sgns_update(jnp.zeros((20, 16)), jnp.zeros((20, 16)), step,
+                        W2VConfig(dim=16, window=3))
+
+
+def test_session_rejects_vocab_shard_incapable_backend():
+    from repro.core.trainer import TrainSession
+    cfg_vs = smoke(dim=16, sentences_per_batch=64, vocab_shard=True)
+    corpus = synthetic_cluster_corpus(n_clusters=4, words_per_cluster=8,
+                                      n_sentences=100, mean_len=10, seed=0)
+    pipe = BatchingPipeline(corpus, cfg_vs)
+    with pytest.raises(ValueError, match="vocab-sharded"):
+        TrainSession(pipe, cfg_vs, backend="pallas_pipelined")
