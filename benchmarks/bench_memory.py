@@ -80,17 +80,27 @@ def vocab_shard_rows() -> List[str]:
         ex = plan_exchange(batch, pl)
         per_dev_mb = 2 * pl.rows_per_device * DIM * 4 / 1e6
         distinct = max(ex.n_distinct) if ex.n_distinct else 0
-        # what a device actually moves with the dense collectives: the
-        # (n, R, d) psum_scatter + (R, d)->(n, R, d) all_gather, x2
-        # tables (DESIGN.md §8 exchange-volume note; R = padded width)
-        dev_xchg_kb = n * ex.request_width * DIM * 4 * 2 * 2 / 1e3
+        # per-device bytes both exchange flavors actually move per step
+        # (DESIGN.md §8 exchange-math table): dense = the (n, R, d)
+        # psum_scatter + all_gather pair; exact = the (n, C, d) bucketed
+        # all_to_all pair — O(distinct) instead of O(n*R). exchange_bytes
+        # is the perf-gate column (benchmarks/compare.py fails on growth
+        # and on exact exceeding dense).
+        dense_kb = ex.bytes_device_dense(DIM) / 1e3
+        exact_kb = ex.bytes_device_exact(DIM) / 1e3
         rows.append(fmt_row(
             f"memory/vocab_shard_n{n}", 0.0,
             f"hot={pl.hot} rows_per_device={pl.rows_per_device} "
             f"mb_per_device={per_dev_mb:.2f} "
             f"cold_shrink={pl.cold / max(pl.cold_per_shard, 1):.1f}x "
             f"max_distinct_rows={distinct} "
-            f"device_exchange_kb_per_step={dev_xchg_kb:.0f}"))
+            f"exchange_bytes={ex.bytes_device_exact(DIM):.0f} "
+            f"exchange_bytes_dense={ex.bytes_device_dense(DIM):.0f} "
+            f"exchange_kb_exact={exact_kb:.0f} "
+            f"exchange_kb_dense={dense_kb:.0f} "
+            f"exchange_shrink={dense_kb / max(exact_kb, 1e-9):.1f}x "
+            f"bucket_capacity={ex.bucket_capacity} "
+            f"bucket_occupancy={ex.bucket_occupancy:.2f}"))
     # -- vocab-growth sweep at fixed shards: exchange tracks distinct rows
     # per shard (bounded by the shard's batch slice), NOT V --------------
     n = 16
@@ -99,11 +109,12 @@ def vocab_shard_rows() -> List[str]:
         pl = VocabPlacement.plan(pipe.vocab.counts, n)
         ex = plan_exchange(batch, pl)
         distinct = max(ex.n_distinct) if ex.n_distinct else 0
-        dev_xchg_kb = n * ex.request_width * DIM * 4 * 2 * 2 / 1e3
         rows.append(fmt_row(
             f"memory/vocab_shard_growth_v{pipe.vocab.size}", 0.0,
             f"shards={n} max_distinct_rows={distinct} "
-            f"device_exchange_kb_per_step={dev_xchg_kb:.0f} "
+            f"exchange_bytes={ex.bytes_device_exact(DIM):.0f} "
+            f"exchange_bytes_dense={ex.bytes_device_dense(DIM):.0f} "
+            f"bucket_occupancy={ex.bucket_occupancy:.2f} "
             f"pmean_equiv_mb={2 * pipe.vocab.size * DIM * 4 / 1e6:.1f}"))
     return rows
 

@@ -10,6 +10,12 @@ Two classes of check, mirroring the repo's standing gates:
     existing 1% gate (``--quality-delta``) for T <= ``--quality-max-tile``,
     checked on the *current* run alone, so a quality break fails even on
     the bootstrap run that has no baseline yet.
+  * **exchange traffic** — any row carrying ``exchange_bytes`` (the
+    request-exact per-device bytes from bench_memory's vocab-shard table)
+    must not grow by more than ``--max-exchange-growth`` vs baseline; and
+    on the current run alone, ``exchange_bytes`` must never exceed its
+    ``exchange_bytes_dense`` sibling — request-exact exceeding the dense
+    collectives means the bucket planner's padding regressed.
 
 Exit status is the contract: 0 = gate passed (including the bootstrap case
 of no baseline files), 1 = regression. ``--simulate-regression 0.25`` scales
@@ -68,6 +74,36 @@ def check_throughput(baseline: Dict[str, dict], current: Dict[str, dict],
     return failures
 
 
+def check_exchange(baseline: Dict[str, dict], current: Dict[str, dict],
+                   max_growth: float) -> List[str]:
+    failures = []
+    for name, cur in sorted(current.items()):
+        xb = cur.get("exchange_bytes")
+        if not isinstance(xb, (int, float)):
+            continue
+        dense = cur.get("exchange_bytes_dense")
+        if isinstance(dense, (int, float)) and xb > dense:
+            print(f"  [REGRESSED] {name}: exchange_bytes={xb:.0f} exceeds "
+                  f"dense path ({dense:.0f})")
+            failures.append(
+                f"{name}: request-exact exchange moves more bytes "
+                f"({xb:.0f}) than the dense collectives ({dense:.0f})")
+            continue
+        base = baseline.get(name, {}).get("exchange_bytes")
+        if not isinstance(base, (int, float)) or base <= 0:
+            print(f"  [new] {name}: exchange_bytes={xb:.0f} (no baseline)")
+            continue
+        ratio = xb / base
+        ok = ratio <= 1.0 + max_growth
+        print(f"  [{'ok' if ok else 'REGRESSED'}] {name}: "
+              f"{base:.0f} -> {xb:.0f} bytes ({(ratio - 1) * 100:+.1f}%)")
+        if not ok:
+            failures.append(
+                f"{name}: exchange_bytes grew {(ratio - 1) * 100:.1f}% "
+                f"(> {max_growth * 100:.0f}% allowed)")
+    return failures
+
+
 def check_quality(current: Dict[str, dict], quality_delta: float,
                   max_tile: int) -> List[str]:
     failures = []
@@ -102,6 +138,10 @@ def main() -> int:
                     help="allowed tiled-vs-sequential quality loss")
     ap.add_argument("--quality-max-tile", type=int, default=8,
                     help="largest T the quality gate applies to")
+    ap.add_argument("--max-exchange-growth", type=float, default=0.20,
+                    help="allowed fractional exchange_bytes growth vs "
+                         "baseline (0.20=20%%); the exact<=dense invariant "
+                         "is checked regardless")
     ap.add_argument("--simulate-regression", type=float, default=0.0,
                     help="scale current words_per_sec down by this fraction "
                          "(gate-failure demonstration only)")
@@ -128,6 +168,8 @@ def main() -> int:
     print("perf-gate: quality (tiled vs sequential, current run)")
     failures += check_quality(current, args.quality_delta,
                               args.quality_max_tile)
+    print("perf-gate: exchange traffic (request-exact bytes)")
+    failures += check_exchange(baseline, current, args.max_exchange_growth)
 
     if failures:
         print("\nperf-gate FAILED:", file=sys.stderr)

@@ -153,9 +153,14 @@ class TrainSession:
         ckpt_dir: Optional[str] = None,
         ckpt_every: int = 0,
         resume: bool = True,
+        exchange: str = "exact",
     ):
         self.pipeline = pipeline
         self.cfg = cfg
+        # vocab-shard exchange flavor: "exact" (request-exact all_to_all
+        # buckets, the default) or "dense" (the all_gather + psum_scatter
+        # reference path the parity tests compare against)
+        self.exchange = exchange
         # resolve once against the registry: invalid backend/capability
         # combinations (unknown name, TPU-only backend off-TPU, plan
         # mismatch) fail here, not mid-epoch. The *requested* name is kept
@@ -180,6 +185,11 @@ class TrainSession:
             self.placement = VocabPlacement.plan(
                 pipeline.vocab.counts, int(mesh.shape["data"]),
                 hot_frac=cfg.hot_vocab_frac)
+            # hand the placement to the host pipeline so exchange plans are
+            # computed in its finalize workers, off the step critical path
+            # (Batch.exchange); _make_step falls back to inline planning
+            # for pipelines (or batches) without one
+            pipeline.placement = self.placement
         self.state = init_state(pipeline.vocab.size, cfg, cfg.seed,
                                 placement=self.placement, mesh=mesh)
         self.total_words = max(1, pipeline.epoch_words * cfg.epochs)
@@ -248,12 +258,13 @@ class TrainSession:
         return fn
 
     # -- vocab-sharded step (hot replica + cold shard, DESIGN.md §8) ---------
-    def _vs_update(self, tile: int, width: int) -> Callable:
-        """The vocab-sharded update for batches of tile size T and request
-        width R. Sentences, tile-plan rows, and per-shard request lists
-        shard over ``data``; the cold tables are row-sharded; hot replicas
-        are averaged like the replicated Hogwild path."""
-        fn = self._vs_updates.get((tile, width))
+    def _vs_update(self, tile: int, width: int, cap: int) -> Callable:
+        """The vocab-sharded update for batches of tile size T, request
+        width R, and bucket capacity C. Sentences, tile-plan rows, and
+        per-shard request buckets shard over ``data``; the cold tables are
+        row-sharded; hot replicas are averaged like the replicated Hogwild
+        path."""
+        fn = self._vs_updates.get((tile, width, cap))
         if fn is not None:
             return fn
         from jax.experimental.shard_map import shard_map
@@ -261,14 +272,15 @@ class TrainSession:
         be = registry.resolve(self._requested_backend, tiled=tile > 1,
                               vocab_shard=True)
         local = ops.vocab_sharded_update(
-            be.name, ops.static_for(self.cfg, tile), self.placement)
+            be.name, ops.static_for(self.cfg, tile), self.placement,
+            exchange=self.exchange)
 
         plan_spec = P("data") if tile > 1 else None
         step_specs = StepInputs(
             tokens=P("data"), negs=P("data"), lengths=P("data"), lr=P(),
             plan_uniq=plan_spec, plan_scatter=plan_spec,
             plan_ucount=plan_spec, plan_strict=plan_spec,
-            cold_ids=P("data"))
+            cold_ids=P("data"), bucket_ids=P("data"), bucket_pos=P("data"))
         sharded = shard_map(
             local, mesh=self.mesh,
             in_specs=(P(), P(), P("data"), P("data"), step_specs),
@@ -276,15 +288,21 @@ class TrainSession:
             check_rep=False,
         )
         fn = jax.jit(sharded, donate_argnums=(0, 1, 2, 3))
-        self._vs_updates[(tile, width)] = fn
+        self._vs_updates[(tile, width, cap)] = fn
         return fn
 
     def _make_step(self, batch: Batch, lr) -> StepInputs:
         """Device StepInputs for a batch: the vocab-sharded exchange plan
-        when the session shards the vocabulary, the plain lift otherwise."""
+        when the session shards the vocabulary, the plain lift otherwise.
+        Batches from a placement-aware pipeline arrive with the exchange
+        plan already computed in the finalize workers (``batch.exchange``);
+        only placement-less batches pay for inline planning here."""
         if self.placement is not None:
-            from repro.distributed.vocab_placement import plan_exchange
-            return plan_exchange(batch, self.placement).step_inputs(lr)
+            ex = getattr(batch, "exchange", None)
+            if ex is None or ex.placement != self.placement:
+                from repro.distributed.vocab_placement import plan_exchange
+                ex = plan_exchange(batch, self.placement)
+            return ex.step_inputs(lr)
         return batch.step_inputs(lr)
 
     # -- train ---------------------------------------------------------------
@@ -307,7 +325,8 @@ class TrainSession:
         if self.placement is not None:
             st = self.state
             st.w_in, st.w_out, st.cold_in, st.cold_out = self._vs_update(
-                step.tile, step.cold_ids.shape[1])(
+                step.tile, step.cold_ids.shape[1],
+                step.bucket_ids.shape[-1])(
                     st.w_in, st.w_out, st.cold_in, st.cold_out, step)
         elif self.mesh is not None:
             self.state.w_in, self.state.w_out = self._dp_update(step.tile)(

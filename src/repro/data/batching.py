@@ -237,6 +237,11 @@ class Batch:
     lengths: np.ndarray   # (S,) int32
     n_words: int          # real (unpadded) words in the batch
     plan: Optional[TilePlan] = None   # set when cfg.tile_windows > 1
+    # vocab-sharding exchange plan (distributed.vocab_placement
+    # .VocabExchange), attached when the pipeline carries a placement —
+    # so request dedup + capacity bucketing run in the finalize workers,
+    # off the training loop's critical path
+    exchange: Optional[object] = None
 
     def step_inputs(self, lr) -> "StepInputs":
         """Lift this host batch into the engine API's device-side struct
@@ -277,10 +282,14 @@ class PackedBatch:
 
 
 def finalize_packed(packed: PackedBatch, cfg: W2VConfig,
-                    sampler: NegativeSampler, epoch: int) -> Batch:
-    """Stage 3: negatives + tile plan for one packed batch. Pure given
-    ``(packed, cfg, sampler table, epoch)`` — the keyed rng means any
-    worker, in any order, produces the identical Batch."""
+                    sampler: NegativeSampler, epoch: int,
+                    placement=None) -> Batch:
+    """Stage 3: negatives + tile plan (+ vocab-sharding exchange plan when
+    ``placement`` is given) for one packed batch. Pure given ``(packed,
+    cfg, sampler table, epoch, placement)`` — the keyed rng means any
+    worker, in any order, produces the identical Batch, and
+    ``plan_exchange`` is rng-free, so the attached exchange inherits the
+    same determinism."""
     toks, lens = packed.tokens, packed.lengths
     rng = negatives_rng(cfg.seed, epoch, packed.index)
     if cfg.tile_windows > 1:
@@ -298,8 +307,14 @@ def finalize_packed(packed: PackedBatch, cfg: W2VConfig,
     plan = None
     if cfg.tile_windows > 1:
         plan = plan_tiles(toks, negs, lens, cfg.tile_windows)
-    return Batch(tokens=toks, negs=negs, lengths=lens, n_words=n_words,
-                 plan=plan)
+    batch = Batch(tokens=toks, negs=negs, lengths=lens, n_words=n_words,
+                  plan=plan)
+    if placement is not None:
+        # local import: keeps this module free of distributed/ unless a
+        # sharded session actually hands its placement to the pipeline
+        from repro.distributed.vocab_placement import plan_exchange
+        batch.exchange = plan_exchange(batch, placement)
+    return batch
 
 
 class BatchingPipeline:
@@ -312,6 +327,10 @@ class BatchingPipeline:
         self.sampler = NegativeSampler(self.vocab.unigram_weights(),
                                        seed=cfg.seed + 1)
         self.stats = BatchingStats()
+        # vocab-sharding placement: a sharded TrainSession deposits its
+        # VocabPlacement here so finalize plans the row exchange per batch
+        # (None => batches carry no exchange and the trainer plans inline)
+        self.placement = None
         # epoch key when batches() is called without one: each call is the
         # next epoch, mirroring TrainSession's per-epoch iteration
         self._auto_epoch = 0
@@ -416,7 +435,8 @@ class BatchingPipeline:
             if packed.index < skip_batches:
                 continue
             t0 = time.perf_counter()
-            batch = finalize_packed(packed, self.cfg, self.sampler, epoch)
+            batch = finalize_packed(packed, self.cfg, self.sampler, epoch,
+                                    self.placement)
             self.stats.seconds += time.perf_counter() - t0
             self.stats.words += batch.n_words
             yield batch

@@ -48,20 +48,31 @@ from repro.data.vocab import Vocab
 
 # ---------------------------------------------------------------------------
 # Process-mode worker state: shipped once via the pool initializer so each
-# finalize task carries only its PackedBatch, not the alias table.
+# finalize task carries only its PackedBatch, not the alias table (nor the
+# vocab-sharding placement).
 # ---------------------------------------------------------------------------
 _WORKER_CFG: Optional[W2VConfig] = None
 _WORKER_SAMPLER: Optional[NegativeSampler] = None
+_WORKER_PLACEMENT = None
 
 
-def _proc_init(cfg: W2VConfig, sampler: NegativeSampler) -> None:
-    global _WORKER_CFG, _WORKER_SAMPLER
+def _proc_init(cfg: W2VConfig, sampler: NegativeSampler,
+               placement=None) -> None:
+    global _WORKER_CFG, _WORKER_SAMPLER, _WORKER_PLACEMENT
     _WORKER_CFG = cfg
     _WORKER_SAMPLER = sampler
+    _WORKER_PLACEMENT = placement
+
+
+def _proc_ready() -> bool:
+    """No-op task: submitting it forces a worker process to spawn and run
+    its initializer (unpickling the cfg + alias table)."""
+    return True
 
 
 def _proc_finalize(packed: PackedBatch, epoch: int) -> Batch:
-    return finalize_packed(packed, _WORKER_CFG, _WORKER_SAMPLER, epoch)
+    return finalize_packed(packed, _WORKER_CFG, _WORKER_SAMPLER, epoch,
+                           _WORKER_PLACEMENT)
 
 
 @dataclasses.dataclass
@@ -118,15 +129,30 @@ class AsyncBatchingPipeline(BatchingPipeline):
             from concurrent.futures import ProcessPoolExecutor
             return ProcessPoolExecutor(
                 max_workers=self.workers, initializer=_proc_init,
-                initargs=(self.cfg, self.sampler))
+                initargs=(self.cfg, self.sampler, self.placement))
         from concurrent.futures import ThreadPoolExecutor
         return ThreadPoolExecutor(max_workers=self.workers,
                                   thread_name_prefix="w2v-finalize")
+
+    def _warm(self, ex: Executor) -> None:
+        """Spawn and initialize every process worker up front. Without
+        this, workers spawn lazily at the first submits: each spawn forks,
+        re-imports, and unpickles the cfg + alias table — one-time setup
+        cost that lands inside the steady-state stats window and was
+        billed to process-mode throughput (the BENCH_6 async_process
+        regression). Thread pools have no per-worker state to warm."""
+        if self.mode != "process":
+            return
+        from concurrent.futures import wait
+        wait([ex.submit(_proc_ready) for _ in range(self.workers)])
 
     def _submit(self, ex: Executor, packed: PackedBatch,
                 epoch: int) -> Future:
         if self.mode == "process":
             return ex.submit(_proc_finalize, packed, epoch)
+        if self.placement is not None:
+            return ex.submit(finalize_packed, packed, self.cfg,
+                             self.sampler, epoch, self.placement)
         return ex.submit(finalize_packed, packed, self.cfg, self.sampler,
                          epoch)
 
@@ -138,6 +164,7 @@ class AsyncBatchingPipeline(BatchingPipeline):
         production runs ahead on the worker pool, bounded by ``depth``."""
         epoch = self._resolve_epoch(epoch)
         ex = self._make_executor()
+        self._warm(ex)   # worker spawn/init is setup, not steady state
         slots = threading.BoundedSemaphore(self.depth)
         out: "queue.Queue[object]" = queue.Queue()
         stop = threading.Event()

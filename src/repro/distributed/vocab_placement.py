@@ -37,6 +37,12 @@ VOCAB_HOT_COVERAGE = 0.9
 # cache sees a handful of request widths per run instead of one per batch.
 _REQUEST_PAD = 64
 
+# Per-owner capacity buckets are padded up to a multiple of this. Buckets
+# are ~R/n_shards entries each (modulo striping balances them), so a finer
+# granule than _REQUEST_PAD keeps the all_to_all padding overhead small
+# while still bounding the number of distinct jit cache keys.
+_BUCKET_PAD = 8
+
 
 @dataclasses.dataclass(frozen=True)
 class VocabPlacement:
@@ -183,6 +189,17 @@ class VocabExchange:
 
     ``cold_ids[s]`` lists shard s's distinct cold ids (first-seen order,
     -1 padded to the common width R).
+
+    ``bucket_ids``/``bucket_pos`` re-sort each request list into per-owner
+    *capacity buckets* for the request-exact ``all_to_all`` exchange:
+    ``bucket_ids[s, o]`` holds the subset of ``cold_ids[s]`` owned by shard
+    ``o`` (-1 padded to the common capacity C), and ``bucket_pos[s, o]``
+    each id's position within shard s's gathered working block (so the
+    served rows scatter straight back into request order; pad slots point
+    one past the end, R, and are dropped). Because ownership is a partition
+    of the request list, ``sum_o count(s, o) == n_distinct[s]`` and the
+    positions of a shard's valid slots are a permutation of
+    ``range(n_distinct[s])``.
     """
 
     placement: VocabPlacement
@@ -191,6 +208,8 @@ class VocabExchange:
     lengths: np.ndarray                    # (S,) int32 (unchanged)
     cold_ids: np.ndarray                   # (n_shards, R) int32, -1 padded
     n_distinct: List[int]                  # real request count per shard
+    bucket_ids: np.ndarray = None          # (n, n, C) int32, -1 padded
+    bucket_pos: np.ndarray = None          # (n, n, C) int32, R padded
     plan_uniq: Optional[np.ndarray] = None     # remapped tile plan rows
     plan_scatter: Optional[np.ndarray] = None  # (unchanged)
     plan_ucount: Optional[np.ndarray] = None
@@ -201,14 +220,46 @@ class VocabExchange:
         """R — padded distinct-cold-rows-per-shard this batch."""
         return int(self.cold_ids.shape[1])
 
+    @property
+    def bucket_capacity(self) -> int:
+        """C — padded per-(requester, owner) bucket width this batch."""
+        return int(self.bucket_ids.shape[2])
+
+    @property
+    def bucket_real(self) -> int:
+        """Real (unpadded) bucket entries across all shards — equals
+        ``sum(n_distinct)`` since ownership partitions each request list."""
+        return int((self.bucket_ids >= 0).sum())
+
+    @property
+    def bucket_occupancy(self) -> float:
+        """Fill fraction of the padded bucket tensor: real entries over
+        ``n² · C`` slots. The complement is pure padding overhead that the
+        all_to_all still moves; ``benchmarks/bench_memory.py`` tracks it."""
+        return self.bucket_real / float(self.bucket_ids.size or 1)
+
     def bytes_exchanged(self, dim: int, itemsize: int = 4) -> int:
-        """Per-step *payload* volume: each distinct cold row crosses the
-        interconnect twice per table (value gather + update write-back),
-        for both ``w_in`` and ``w_out`` — O(distinct rows), never O(V).
-        The dense collectives the step currently uses move ~n_shards×
-        this many bytes per device (DESIGN.md §8 exchange-volume note);
-        ``benchmarks/bench_memory.py`` reports the n-inclusive figure."""
+        """Ideal per-step *payload* volume summed over the mesh: each
+        distinct cold row crosses the interconnect twice per table (value
+        gather + update write-back), for both ``w_in`` and ``w_out`` —
+        O(distinct rows), never O(V)."""
         return sum(self.n_distinct) * dim * itemsize * 2 * 2
+
+    def bytes_device_dense(self, dim: int, itemsize: int = 4) -> int:
+        """Per-device bytes the PR 5 *dense* exchange moved: all_gather +
+        psum_scatter materialize every shard's full padded request list on
+        every device — ``n · R`` rows per direction per table, an n-fold
+        constant over the payload (DESIGN.md §8)."""
+        n = self.placement.n_shards
+        return n * self.request_width * dim * itemsize * 2 * 2
+
+    def bytes_device_exact(self, dim: int, itemsize: int = 4) -> int:
+        """Per-device bytes of the request-exact bucketed ``all_to_all``:
+        ``n · C ≈ R`` rows per direction per table (capacity padding is the
+        only slack — bounded by ``bucket_occupancy``), so per-device
+        traffic is O(distinct · d) regardless of mesh size."""
+        n = self.placement.n_shards
+        return n * self.bucket_capacity * dim * itemsize * 2 * 2
 
     def step_inputs(self, lr) -> "Any":
         """Lift onto the device as a vocab-sharded ``StepInputs``."""
@@ -225,7 +276,9 @@ class VocabExchange:
                           negs=jnp.asarray(self.negs),
                           lengths=jnp.asarray(self.lengths),
                           lr=jnp.asarray(lr, jnp.float32),
-                          cold_ids=jnp.asarray(self.cold_ids), **kw)
+                          cold_ids=jnp.asarray(self.cold_ids),
+                          bucket_ids=jnp.asarray(self.bucket_ids),
+                          bucket_pos=jnp.asarray(self.bucket_pos), **kw)
 
 
 def plan_exchange(batch, placement: VocabPlacement) -> VocabExchange:
@@ -284,10 +337,40 @@ def plan_exchange(batch, placement: VocabPlacement) -> VocabExchange:
             uniq[sl] = remap[uniq[sl]]
         remap[li] = 0   # restore for the next shard
 
+    bucket_ids, bucket_pos = _plan_buckets(lists, placement, width)
+
     kw = {}
     if plan is not None:
         kw = dict(plan_uniq=uniq, plan_scatter=plan.scatter,
                   plan_ucount=plan.ucount, plan_strict=plan.strict)
     return VocabExchange(placement=placement, tokens=tokens, negs=negs,
                          lengths=batch.lengths, cold_ids=cold_ids,
-                         n_distinct=[len(li) for li in lists], **kw)
+                         n_distinct=[len(li) for li in lists],
+                         bucket_ids=bucket_ids, bucket_pos=bucket_pos, **kw)
+
+
+def _plan_buckets(lists: List[np.ndarray], placement: VocabPlacement,
+                  width: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Re-sort per-shard request lists into per-owner capacity buckets.
+
+    Returns ``(bucket_ids, bucket_pos)``, both ``(n, n, C)``:
+    ``bucket_ids[s, o]`` is the sub-list of shard s's requests owned by
+    shard o (-1 padded), ``bucket_pos[s, o]`` each id's first-seen position
+    in shard s's request list (pad slots hold ``width`` — one past the
+    gathered block — so a ``mode="drop"`` scatter discards them). C is the
+    max per-owner count over all ``(s, o)`` pairs, rounded up to
+    ``_BUCKET_PAD`` so shapes stay static across a run's typical batches.
+    """
+    n, hot = placement.n_shards, placement.hot
+    owners = [((li - hot) % n).astype(np.int64) for li in lists]
+    cap = max((int(np.max(np.bincount(ow, minlength=n), initial=0))
+               for ow in owners if ow.size), default=0)
+    cap = max(-(-max(cap, 1) // _BUCKET_PAD) * _BUCKET_PAD, _BUCKET_PAD)
+    bucket_ids = np.full((n, n, cap), -1, dtype=np.int32)
+    bucket_pos = np.full((n, n, cap), width, dtype=np.int32)
+    for s, (li, ow) in enumerate(zip(lists, owners)):
+        for o in range(n):
+            pos = np.nonzero(ow == o)[0]
+            bucket_ids[s, o, :len(pos)] = li[pos]
+            bucket_pos[s, o, :len(pos)] = pos
+    return bucket_ids, bucket_pos

@@ -98,6 +98,62 @@ def _ctx_offsets(w_f: int) -> list:
 # Shared building blocks (used by all three kernel variants)
 # ---------------------------------------------------------------------------
 
+class _Table:
+    """A row-addressed HBM embedding table, optionally *split* (DESIGN.md
+    §8 fused gather): rows ``[0, hot)`` live in ``main`` (the replicated
+    hot head), rows ``>= hot`` in ``got`` at ``row - hot`` (the gathered
+    cold block delivered by the request-exact exchange). The kernel streams
+    rows from whichever buffer owns them — both directions of every DMA
+    branch on the row index at trace-recomputable scalar cost — so a
+    vocab-sharded step never materializes ``concat(hot, gathered)``. With
+    ``got=None`` the helpers are exactly the single-table DMA calls."""
+
+    def __init__(self, main, got=None, hot: int = 0):
+        self.main, self.got, self.hot = main, got, hot
+
+    def _each(self, row):
+        """(predicate, hbm_slice) per buffer; predicate None = always."""
+        if self.got is None:
+            yield None, self.main.at[pl.ds(row, 1)]
+        else:
+            lo = jnp.minimum(row, self.hot - 1)
+            hi = jnp.maximum(row - self.hot, 0)
+            yield row < self.hot, self.main.at[pl.ds(lo, 1)]
+            yield row >= self.hot, self.got.at[pl.ds(hi, 1)]
+
+    def _move(self, row, vmem, sem, to_hbm: bool, op: str):
+        for pred, hbm in self._each(row):
+            src, dst = (vmem, hbm) if to_hbm else (hbm, vmem)
+            if pred is None:
+                getattr(pltpu.make_async_copy(src, dst, sem), op)()
+            else:
+                @pl.when(pred)
+                def _(src=src, dst=dst):
+                    getattr(pltpu.make_async_copy(src, dst, sem), op)()
+
+    # start/wait split so callers can batch DMAs (start all, wait all);
+    # the wait call rebuilds the same descriptor under the same predicate
+    def start_load(self, row, vmem, sem):
+        self._move(row, vmem, sem, to_hbm=False, op="start")
+
+    def wait_load(self, row, vmem, sem):
+        self._move(row, vmem, sem, to_hbm=False, op="wait")
+
+    def start_store(self, vmem, row, sem):
+        self._move(row, vmem, sem, to_hbm=True, op="start")
+
+    def wait_store(self, vmem, row, sem):
+        self._move(row, vmem, sem, to_hbm=True, op="wait")
+
+    def load(self, row, vmem, sem):
+        self.start_load(row, vmem, sem)
+        self.wait_load(row, vmem, sem)
+
+    def store(self, vmem, row, sem):
+        self.start_store(vmem, row, sem)
+        self.wait_store(vmem, row, sem)
+
+
 def _window_update(ctx, out_rows, label, mask, lr):
     """The SGNS window update (DESIGN.md §2) on VMEM-resident blocks.
 
@@ -180,20 +236,16 @@ def _window_label_mask(t, k_pad: int, m_pad: int, *, w_f: int, n_neg: int,
     return label, mask
 
 
-def _seq_window(t, tokens_ref, negs_ref, w_out_out, ring, ctx_blk, out_blk,
+def _seq_window(t, tokens_ref, negs_ref, w_out_tab, ring, ctx_blk, out_blk,
                 sem, *, w_f: int, n_neg: int, r: int, length, L: int, lr):
     """One strictly-ordered window update (fetch → GEMMs → apply → write
     back). Shared by `_kernel` and `_kernel_tiled`'s strict fallback; `r` is
-    the caller's ring size (2*w_f+1 sequential, T+2*w_f tiled)."""
+    the caller's ring size (2*w_f+1 sequential, T+2*w_f tiled);
+    ``w_out_tab`` is a :class:`_Table` (split under fused gather)."""
     k = 2 * w_f
     m = n_neg + 1
     k_pad = ctx_blk.shape[0]
     m_pad = out_blk.shape[0]
-
-    def copy(src, dst):
-        cp = pltpu.make_async_copy(src, dst, sem)
-        cp.start()
-        cp.wait()
 
     # ---- gather context rows (from VMEM ring — no HBM traffic) ----
     _gather_window_ctx(ring, ctx_blk, t, 0, w_f=w_f, r=r, length=length, L=L)
@@ -201,10 +253,10 @@ def _seq_window(t, tokens_ref, negs_ref, w_out_out, ring, ctx_blk, out_blk,
 
     # ---- fetch output rows: target + shared negatives (paper §3.1) ----
     tgt = tokens_ref[0, t]
-    copy(w_out_out.at[pl.ds(tgt, 1)], out_blk.at[pl.ds(0, 1)])
+    w_out_tab.load(tgt, out_blk.at[pl.ds(0, 1)], sem)
     for j in range(n_neg):
         neg = negs_ref[0, t, j]
-        copy(w_out_out.at[pl.ds(neg, 1)], out_blk.at[pl.ds(1 + j, 1)])
+        w_out_tab.load(neg, out_blk.at[pl.ds(1 + j, 1)], sem)
     _zero_rows(out_blk, m, m_pad)
 
     # ---- the window update: two tiny GEMMs on VMEM-resident data ----
@@ -219,10 +271,10 @@ def _seq_window(t, tokens_ref, negs_ref, w_out_out, ring, ctx_blk, out_blk,
 
     # ---- output rows: update in VMEM, write back once per window ----
     out_blk[...] = out_rows + d_out
-    copy(out_blk.at[pl.ds(0, 1)], w_out_out.at[pl.ds(tgt, 1)])
+    w_out_tab.store(out_blk.at[pl.ds(0, 1)], tgt, sem)
     for j in range(n_neg):
         neg = negs_ref[0, t, j]
-        copy(out_blk.at[pl.ds(1 + j, 1)], w_out_out.at[pl.ds(neg, 1)])
+        w_out_tab.store(out_blk.at[pl.ds(1 + j, 1)], neg, sem)
 
 
 # ---------------------------------------------------------------------------
@@ -292,9 +344,9 @@ def _kernel(
                 store_ring(q - r)
             load_ring(q)
 
-        _seq_window(t, tokens_ref, negs_ref, w_out_out, ring, ctx_blk,
-                    out_blk, sem, w_f=w_f, n_neg=n_neg, r=r, length=length,
-                    L=L, lr=lr)
+        _seq_window(t, tokens_ref, negs_ref, _Table(w_out_out), ring,
+                    ctx_blk, out_blk, sem, w_f=w_f, n_neg=n_neg, r=r,
+                    length=length, L=L, lr=lr)
         return 0
 
     def guarded_step(t, c):
@@ -492,23 +544,20 @@ def _kernel_tiled(
     scat_ref,      # (1, nt, T*m) int32 SMEM — slot -> uniq column
     ucount_ref,    # (1, nt) int32 SMEM — valid uniq columns per tile
     strict_ref,    # (1, nt) int32 SMEM — 1: sequential fallback tile
-    # --- HBM (ANY) inputs, aliased to outputs ---
-    w_in_hbm, w_out_hbm,
-    # --- outputs (aliased) ---
-    w_in_out, w_out_out,
-    # --- scratch ---
-    ring,          # (Rt_pad, d) f32 VMEM — T + 2*w_f position ring
-    ctx_tile,      # (GK_pad, d) f32 VMEM — one GEMM group's context rows
-    out_uniq,      # (U_pad, d) f32 VMEM — deduplicated output rows
-    out_exp,       # (GM_pad, d) f32 VMEM — scatter-expanded group rows
-    ctx_win,       # (k_pad, d) f32 VMEM — strict-fallback window context
-    out_win,       # (m_pad, d) f32 VMEM — strict-fallback window rows
-    sem,           # DMA semaphore
-    *,
+    # --- HBM (ANY) inputs + aliased outputs + scratch, layout depends on
+    # hot_rows/prefetch (see the unpacking right below):
+    #   hot_rows == 0: w_in_hbm, w_out_hbm, w_in_out, w_out_out
+    #   hot_rows > 0 : hot/got in/out pairs (8 refs, fused-gather split)
+    # then: ring (Rt_pad, d), ctx_tile (GK_pad, d), out_uniq
+    # (n_buf, U_pad, d), out_exp (GM_pad, d), ctx_win (k_pad, d), out_win
+    # (m_pad, d), sem [, sem_pf (2,) when prefetch]
+    *refs,
     w_f: int,
     n_neg: int,
     tile: int,
     gemm_windows: int,
+    hot_rows: int = 0,
+    prefetch: bool = False,
 ):
     """T consecutive windows per step. Collision-free tiles (host `strict`
     bit clear) fetch the tile's deduplicated output rows as one batched DMA,
@@ -516,7 +565,33 @@ def _kernel_tiled(
     runs two (G*K, G*m, d) MXU-shaped GEMMs and applies its deltas to the
     VMEM ring and out_uniq block before the next group reads them — so DMA
     amortizes over the whole tile while value staleness is bounded by G
-    (DESIGN.md §4). Strict tiles replay the exact sequential path."""
+    (DESIGN.md §4). Strict tiles replay the exact sequential path.
+
+    With ``hot_rows > 0`` (fused gather, DESIGN.md §8) the working table
+    arrives *split* — hot replica + gathered cold block — and every row DMA
+    routes through :class:`_Table`. With ``prefetch`` (the fused-gather
+    entry point) ``out_uniq`` is double-buffered across tiles: while tile i
+    runs its GEMM groups, tile i+1's unique output rows stream HBM→VMEM
+    into the other half, and only rows colliding with tile i's write-back
+    set (detected by trace-recomputable SMEM compares, like
+    ``_kernel_pipelined``) are re-fetched synchronously — so cold-row fetch
+    overlaps window compute instead of serializing ahead of it."""
+    n_tab = 4 if hot_rows else 2
+    outs = refs[n_tab:2 * n_tab]
+    scratch = refs[2 * n_tab:]
+    if hot_rows:
+        w_in_tab = _Table(outs[0], outs[2], hot_rows)
+        w_out_tab = _Table(outs[1], outs[3], hot_rows)
+    else:
+        w_in_tab = _Table(outs[0])
+        w_out_tab = _Table(outs[1])
+    if prefetch:
+        (ring, ctx_tile, out_uniq, out_exp, ctx_win, out_win, sem,
+         sem_pf) = scratch
+    else:
+        ring, ctx_tile, out_uniq, out_exp, ctx_win, out_win, sem = scratch
+        sem_pf = None
+
     L = tokens_ref.shape[1]
     nt = uniq_ref.shape[1]
     rt = tile + 2 * w_f            # ring positions covering the whole tile
@@ -526,24 +601,37 @@ def _kernel_tiled(
     G = gemm_windows
     gk_pad = ctx_tile.shape[0]
     gm_pad = out_exp.shape[0]
-    u_pad = out_uniq.shape[0]
+    u_pad = out_uniq.shape[1]
     k_pad = ctx_win.shape[0]
     m_pad = out_win.shape[0]
+    d = ring.shape[-1]
     length = length_ref[0]
     lr = lr_ref[0]
 
-    def copy(src, dst):
-        cp = pltpu.make_async_copy(src, dst, sem)
-        cp.start()
-        cp.wait()
-
     def load_ring(q):
-        tok = tokens_ref[0, q]
-        copy(w_in_out.at[pl.ds(tok, 1)], ring.at[pl.ds(q % rt, 1)])
+        w_in_tab.load(tokens_ref[0, q], ring.at[pl.ds(q % rt, 1)], sem)
 
     def store_ring(p):
-        tok = tokens_ref[0, p]
-        copy(ring.at[pl.ds(p % rt, 1)], w_in_out.at[pl.ds(tok, 1)])
+        w_in_tab.store(ring.at[pl.ds(p % rt, 1)], tokens_ref[0, p], sem)
+
+    def was_prefetched(ti, c):
+        """Was uniq column c of tile ti prefetched during tile ti-1? A pure
+        function of SMEM state, evaluated identically at the start site
+        (tile ti-1) and the wait site (tile ti): both tiles must run the
+        fused path, c must be a real column, and the row must not collide
+        with tile ti-1's write-back set (a stale prefetch otherwise)."""
+        tc = jnp.clip(ti, 0, nt - 1)
+        pv = jnp.maximum(tc - 1, 0)
+        ok = ((ti > 0) & (ti < nt) & (ti * tile < length)
+              & (strict_ref[0, tc] == 0) & (strict_ref[0, pv] == 0)
+              & (c < ucount_ref[0, tc]))
+        idx = uniq_ref[0, tc, c]
+        hit = jnp.bool_(False)
+        for cc in range(M):
+            hit = jnp.logical_or(
+                hit, jnp.logical_and(cc < ucount_ref[0, pv],
+                                     idx == uniq_ref[0, pv, cc]))
+        return jnp.logical_and(ok, ~hit)
 
     # --- preload positions 0..w_f-1 ---
     def preload(q, _):
@@ -579,6 +667,9 @@ def _kernel_tiled(
     def tile_step(i, _):
         t0 = i * tile
         strict = strict_ref[0, i] != 0
+        # double-buffer parity: tile i's rows live in half i % 2 (half 0
+        # always when the prefetch stage is off)
+        buf = jax.lax.rem(i, 2) if prefetch else 0
 
         # ---- strict fallback: bit-identical sequential replay (the ring
         # advance interleaves per window exactly as `_kernel`) ----
@@ -590,7 +681,7 @@ def _kernel_tiled(
                 @pl.when(t < length)
                 def _():
                     advance_window(t)
-                    _seq_window(t, tokens_ref, negs_ref, w_out_out, ring,
+                    _seq_window(t, tokens_ref, negs_ref, w_out_tab, ring,
                                 ctx_win, out_win, sem, w_f=w_f, n_neg=n_neg,
                                 r=rt, length=length, L=L, lr=lr)
 
@@ -599,26 +690,57 @@ def _kernel_tiled(
         def _():
             # batched multi-row fetch of the deduplicated output rows:
             # issue every start, then wait — one DMA-latency exposure per
-            # tile instead of one per row (paper §3.1 amortization)
+            # tile instead of one per row (paper §3.1 amortization). Rows
+            # already in flight from the previous tile's prefetch stage
+            # only need their wait.
             u = ucount_ref[0, i]
             for c in range(M):
-                @pl.when(c < u)
-                def _():
-                    pltpu.make_async_copy(
-                        w_out_out.at[pl.ds(uniq_ref[0, i, c], 1)],
-                        out_uniq.at[pl.ds(c, 1)], sem).start()
+                fetch = c < u
+                if prefetch:
+                    fetch = jnp.logical_and(fetch, ~was_prefetched(i, c))
+
+                @pl.when(fetch)
+                def _(c=c):
+                    w_out_tab.start_load(uniq_ref[0, i, c],
+                                         out_uniq.at[buf, pl.ds(c, 1)], sem)
 
                 @pl.when(~(c < u))
-                def _():
-                    out_uniq[pl.ds(c, 1), :] = jnp.zeros(
-                        (1, out_uniq.shape[1]), out_uniq.dtype)
+                def _(c=c):
+                    out_uniq[buf, pl.ds(c, 1), :] = jnp.zeros(
+                        (1, d), out_uniq.dtype)
             for c in range(M):
-                @pl.when(c < u)
-                def _():
-                    pltpu.make_async_copy(
-                        w_out_out.at[pl.ds(uniq_ref[0, i, c], 1)],
-                        out_uniq.at[pl.ds(c, 1)], sem).wait()
-            _zero_rows(out_uniq, M, u_pad)
+                fetch = c < u
+                if prefetch:
+                    pf = was_prefetched(i, c)
+                    fetch = jnp.logical_and(fetch, ~pf)
+
+                    @pl.when(pf)
+                    def _(c=c):
+                        w_out_tab.wait_load(uniq_ref[0, i, c],
+                                            out_uniq.at[buf, pl.ds(c, 1)],
+                                            sem_pf.at[buf])
+
+                @pl.when(fetch)
+                def _(c=c):
+                    w_out_tab.wait_load(uniq_ref[0, i, c],
+                                        out_uniq.at[buf, pl.ds(c, 1)], sem)
+            if u_pad > M:
+                out_uniq[buf, pl.ds(M, u_pad - M), :] = jnp.zeros(
+                    (u_pad - M, d), out_uniq.dtype)
+
+            # ---- overlap: start streaming tile i+1's unique rows into the
+            # other half while this tile's GEMM groups run; rows colliding
+            # with this tile's write-back set stay un-prefetched (the wait
+            # site recomputes the same predicate and sync-loads them) ----
+            if prefetch:
+                nxt = jnp.minimum(i + 1, nt - 1)
+                for c in range(M):
+                    @pl.when(was_prefetched(i + 1, c))
+                    def _(c=c):
+                        w_out_tab.start_load(
+                            uniq_ref[0, nxt, c],
+                            out_uniq.at[1 - buf, pl.ds(c, 1)],
+                            sem_pf.at[1 - buf])
 
             # GEMM groups of G windows: deltas land in the VMEM ring /
             # out_uniq between groups, bounding staleness to G windows
@@ -633,7 +755,8 @@ def _kernel_tiled(
                 # expand the group's slots from the (fresh) compacted rows
                 for sj in range(wn * m):
                     col = scat_ref[0, i, w0 * m + sj]
-                    out_exp[pl.ds(sj, 1), :] = out_uniq[pl.ds(col, 1), :]
+                    out_exp[pl.ds(sj, 1), :] = out_uniq[buf,
+                                                        pl.ds(col, 1), :]
                 _zero_rows(out_exp, wn * m, gm_pad)
 
                 # two MXU-shaped GEMMs with a block-diagonal mask (window
@@ -665,8 +788,8 @@ def _kernel_tiled(
                 # slots carry zero gradient)
                 for sj in range(wn * m):
                     col = scat_ref[0, i, w0 * m + sj]
-                    out_uniq[pl.ds(col, 1), :] = (
-                        out_uniq[pl.ds(col, 1), :] + d_out[sj:sj + 1, :])
+                    out_uniq[buf, pl.ds(col, 1), :] = (
+                        out_uniq[buf, pl.ds(col, 1), :] + d_out[sj:sj + 1, :])
 
             for b in range((tile + G - 1) // G):
                 w0 = b * G
@@ -701,18 +824,14 @@ def _kernel_tiled(
             # write each unique row back once per tile
             for c in range(M):
                 @pl.when(c < u)
-                def _():
-                    pltpu.make_async_copy(
-                        out_uniq.at[pl.ds(c, 1)],
-                        w_out_out.at[pl.ds(uniq_ref[0, i, c], 1)],
-                        sem).start()
+                def _(c=c):
+                    w_out_tab.start_store(out_uniq.at[buf, pl.ds(c, 1)],
+                                          uniq_ref[0, i, c], sem)
             for c in range(M):
                 @pl.when(c < u)
-                def _():
-                    pltpu.make_async_copy(
-                        out_uniq.at[pl.ds(c, 1)],
-                        w_out_out.at[pl.ds(uniq_ref[0, i, c], 1)],
-                        sem).wait()
+                def _(c=c):
+                    w_out_tab.wait_store(out_uniq.at[buf, pl.ds(c, 1)],
+                                         uniq_ref[0, i, c], sem)
         return 0
 
     def guarded_tile(i, c):
@@ -853,7 +972,7 @@ def fullw2v_pallas_tiled(
     scratch = [
         pltpu.VMEM((dims["ring"], d), jnp.float32),
         pltpu.VMEM((dims["ctx_tile"], d), jnp.float32),  # one GEMM group
-        pltpu.VMEM((dims["out_uniq"], d), jnp.float32),
+        pltpu.VMEM((1, dims["out_uniq"], d), jnp.float32),
         pltpu.VMEM((dims["out_exp"], d), jnp.float32),   # one GEMM group
         pltpu.VMEM((dims["ctx_win"], d), jnp.float32),   # strict path
         pltpu.VMEM((dims["out_win"], d), jnp.float32),   # strict path
@@ -895,3 +1014,106 @@ def fullw2v_pallas_tiled(
     )(tokens, negs, lengths, lr_arr, uniq, scatter, ucount, strict,
       w_in, w_out)
     return out[0], out[1]
+
+
+def fullw2v_pallas_tiled_fused(
+    hot_in: jax.Array,   # (hot, d) f32 — replicated hot head
+    hot_out: jax.Array,  # (hot, d) f32
+    got_in: jax.Array,   # (R, d) f32 — gathered cold block (request order)
+    got_out: jax.Array,  # (R, d) f32
+    tokens: jax.Array,   # (S, L) int32 — working-table ids (< hot + R)
+    negs: jax.Array,     # (S, L, N) int32
+    lengths: jax.Array,  # (S,) int32
+    lr: jax.Array,       # scalar f32
+    w_f: int,
+    tile: int,
+    uniq: jax.Array,     # (S, nt, T*(N+1)) int32 — from plan_tiles
+    scatter: jax.Array,  # (S, nt, T*(N+1)) int32
+    ucount: jax.Array,   # (S, nt) int32
+    strict: jax.Array,   # (S, nt) int32
+    gemm_windows: int = 0,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The window-tiled pass on a *split* vocab-sharded working table
+    (DESIGN.md §8 fused gather): the hot replica and the gathered cold
+    block stay separate HBM buffers — every token/negative/plan id below
+    ``hot`` streams from ``hot_*``, the rest from ``got_*`` at ``id -
+    hot`` — and the tile fetch stage is double-buffered so tile i+1's
+    cold-row DMAs overlap tile i's window GEMMs. Semantics are identical
+    to running :func:`fullw2v_pallas_tiled` on ``concat(hot, got)`` and
+    splitting the result."""
+    S, L = tokens.shape
+    n_neg = negs.shape[-1]
+    hot, d = hot_in.shape
+    r_width = got_in.shape[0]
+    assert d % LANE == 0, f"embedding dim {d} must be a multiple of {LANE}"
+    assert hot >= 1
+    assert got_in.shape == got_out.shape == (r_width, d)
+    assert hot_out.shape == (hot, d)
+    assert tile >= 1
+    G = resolve_gemm_windows(tile, gemm_windows)
+    m = n_neg + 1
+    nt = uniq.shape[1]
+    M = tile * m
+    assert uniq.shape == (S, nt, M), (uniq.shape, (S, nt, M))
+    assert scatter.shape == (S, nt, M)
+    assert nt == -(-L // tile)
+    dims = tiled_scratch_rows(tile, w_f, n_neg, G)
+
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape((1,))
+
+    kernel = functools.partial(_kernel_tiled, w_f=w_f, n_neg=n_neg,
+                               tile=tile, gemm_windows=G, hot_rows=hot,
+                               prefetch=True)
+    scratch = [
+        pltpu.VMEM((dims["ring"], d), jnp.float32),
+        pltpu.VMEM((dims["ctx_tile"], d), jnp.float32),
+        pltpu.VMEM((2, dims["out_uniq"], d), jnp.float32),  # double buffer
+        pltpu.VMEM((dims["out_exp"], d), jnp.float32),
+        pltpu.VMEM((dims["ctx_win"], d), jnp.float32),
+        pltpu.VMEM((dims["out_win"], d), jnp.float32),
+        pltpu.SemaphoreType.DMA,                             # strict/ring
+        pltpu.SemaphoreType.DMA((2,)),                       # per-half
+    ]
+    out = pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda s: (s, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, L, n_neg), lambda s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda s: (s,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, nt, M), lambda s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, nt, M), lambda s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, nt), lambda s: (s, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, nt), lambda s: (s, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hot, d), hot_in.dtype),
+            jax.ShapeDtypeStruct((hot, d), hot_out.dtype),
+            jax.ShapeDtypeStruct((r_width, d), got_in.dtype),
+            jax.ShapeDtypeStruct((r_width, d), got_out.dtype),
+        ],
+        scratch_shapes=scratch,
+        input_output_aliases={8: 0, 9: 1, 10: 2, 11: 3},
+        interpret=interpret,
+    )(tokens, negs, lengths, lr_arr, uniq, scatter, ucount, strict,
+      hot_in, hot_out, got_in, got_out)
+    return out[0], out[1], out[2], out[3]

@@ -39,7 +39,8 @@ import jax.numpy as jnp
 from repro.configs.w2v import W2VConfig, resolve_gemm_windows
 from repro.kernels import ref as _ref
 from repro.kernels import registry
-from repro.kernels.fullw2v import fullw2v_pallas, fullw2v_pallas_tiled
+from repro.kernels.fullw2v import (fullw2v_pallas, fullw2v_pallas_tiled,
+                                   fullw2v_pallas_tiled_fused)
 from repro.kernels.registry import (KernelBackend, KernelStatic, StepInputs,
                                     register)
 
@@ -94,6 +95,20 @@ def _update_pallas_tiled_interpret(w_in, w_out, step, static):
                                 interpret=True)
 
 
+def _update_fused_pallas_tiled(hot_in, hot_out, got_in, got_out, step, static):
+    return fullw2v_pallas_tiled_fused(hot_in, hot_out, got_in, got_out,
+                                      *_tiled_args(step, static),
+                                      gemm_windows=static.gemm_windows)
+
+
+def _update_fused_pallas_tiled_interpret(hot_in, hot_out, got_in, got_out,
+                                         step, static):
+    return fullw2v_pallas_tiled_fused(hot_in, hot_out, got_in, got_out,
+                                      *_tiled_args(step, static),
+                                      gemm_windows=static.gemm_windows,
+                                      interpret=True)
+
+
 register(KernelBackend(
     name="jnp", update=_update_jnp,
     description="compiled jnp oracle (kernels.ref.batch_sgns_ref)",
@@ -126,11 +141,13 @@ register(KernelBackend(
     name="pallas_tiled", update=_update_pallas_tiled,
     description="window-tiled Pallas kernel (TPU-native, DESIGN.md §4)",
     needs_plan=True, requires_tpu=True, supports_vocab_shard=True,
-    interpret_variant="pallas_tiled_interpret"))
+    interpret_variant="pallas_tiled_interpret",
+    update_fused=_update_fused_pallas_tiled))
 register(KernelBackend(
     name="pallas_tiled_interpret", update=_update_pallas_tiled_interpret,
     description="window-tiled Pallas kernel, interpret mode (any platform)",
-    needs_plan=True, supports_vocab_shard=True))
+    needs_plan=True, supports_vocab_shard=True,
+    update_fused=_update_fused_pallas_tiled_interpret))
 
 
 # ---------------------------------------------------------------------------
@@ -199,7 +216,7 @@ def sgns_update(
 # ---------------------------------------------------------------------------
 
 def vocab_sharded_update(backend: str, static: KernelStatic, placement,
-                         axis_name: str = "data"):
+                         axis_name: str = "data", exchange: str = "exact"):
     """The per-shard update for vocab-sharded tables, to run under
     ``shard_map`` over ``axis_name``.
 
@@ -214,19 +231,28 @@ def vocab_sharded_update(backend: str, static: KernelStatic, placement,
     ``step`` a :class:`~repro.kernels.registry.StepInputs` built by
     ``distributed.vocab_placement.plan_exchange`` (token/negative/plan ids
     remapped to working-table space, ``cold_ids`` = per-shard request
-    lists).
+    lists, ``bucket_ids``/``bucket_pos`` = the per-owner capacity buckets).
 
     One step does, entirely on-device (DESIGN.md §8 exchange math):
 
-    1. **Gather** — all-gather the request lists (ints, O(n·R)), serve the
-       rows this shard owns, and ``psum_scatter`` so every shard receives
-       the values of exactly its R requested rows: O(R·d) per shard, never
-       O(V).
-    2. **Compute** — run the resolved backend *unchanged* on the compact
-       working table ``concat(hot, gathered)`` of ``hot + R`` rows.
+    1. **Gather** (``exchange="exact"``, the default) — ``all_to_all`` the
+       per-owner request buckets (ints, O(n·C) ≈ O(R)), serve the rows
+       this shard owns, ``all_to_all`` the values back, and scatter them
+       into request order via the host-planned bucket positions: every
+       shard sends and receives O(R·d) bytes — request-exact, independent
+       of both V and the mesh size. ``exchange="dense"`` keeps the PR 5
+       all_gather + ``psum_scatter`` path (O(n·R·d) per device) as the
+       parity reference.
+    2. **Compute** — run the resolved backend on the compact working table
+       of ``hot + R`` rows: backends declaring ``supports_fused_gather``
+       are handed the hot replica and the gathered block as *separate*
+       buffers (the kernel streams rows from whichever side owns them, no
+       ``concat`` materialization); the rest run unchanged on
+       ``concat(hot, gathered)``.
     3. **Write back** — pmean the hot head across shards (Hogwild
-       averaging, identical to the replicated path); all-gather the R
-       updated request rows and scatter-add them into the owner shards,
+       averaging, identical to the replicated path); route the updated
+       request rows back to their owners (``all_to_all`` over the same
+       buckets, or all_gather on the dense path) and scatter-add them,
        averaging each touched row over all ``n`` replicas' contributions
        (untouched replicas contribute the pre-step value, which the owner
        reconstructs locally — see DESIGN.md §8 for the tolerance this
@@ -237,11 +263,32 @@ def vocab_sharded_update(backend: str, static: KernelStatic, placement,
         raise ValueError(
             f"backend {backend!r} does not support vocab-sharded tables; "
             f"resolve with vocab_shard=True to get an actionable choice")
+    if exchange not in ("exact", "dense"):
+        raise ValueError(f"exchange must be 'exact' or 'dense', "
+                         f"got {exchange!r}")
     hot = placement.hot
     cps = placement.cold_per_shard
     n = placement.n_shards
 
-    def run(hot_in, hot_out, cold_in, cold_out, step: StepInputs):
+    def compute(hot_in, hot_out, got_in, got_out, step):
+        """Run the backend on the working table; return (new_hot_in,
+        new_hot_out, new_got_in, new_got_out)."""
+        if be.supports_fused_gather:
+            return be.update_fused(hot_in, hot_out, got_in, got_out,
+                                   step, static)
+        w_in_work = jnp.concatenate([hot_in, got_in], axis=0)
+        w_out_work = jnp.concatenate([hot_out, got_out], axis=0)
+        new_in, new_out = be.update(w_in_work, w_out_work, step, static)
+        return new_in[:hot], new_out[:hot], new_in[hot:], new_out[hot:]
+
+    def hogwild_mean(cold, acc, kcnt):
+        """Owner-side merge: sum of the k updated replicas of each touched
+        row plus (n - k) copies of the pre-step value, divided by n."""
+        touched = kcnt[:, None] > 0
+        return jnp.where(touched, (acc + (n - kcnt)[:, None] * cold) / n,
+                         cold)
+
+    def run_dense(hot_in, hot_out, cold_in, cold_out, step: StepInputs):
         me = jax.lax.axis_index(axis_name)
         ids_all = jax.lax.all_gather(step.cold_ids[0], axis_name)  # (n, R)
         valid = ids_all >= 0
@@ -254,18 +301,11 @@ def vocab_sharded_update(backend: str, static: KernelStatic, placement,
             return jax.lax.psum_scatter(
                 served, axis_name, scatter_dimension=0, tiled=True)[0]
 
-        got_in, got_out = gather(cold_in), gather(cold_out)        # (R, d)
-        w_in_work = jnp.concatenate([hot_in, got_in], axis=0)
-        w_out_work = jnp.concatenate([hot_out, got_out], axis=0)
+        hot_in_new, hot_out_new, new_got_in, new_got_out = compute(
+            hot_in, hot_out, gather(cold_in), gather(cold_out), step)
+        hot_in_new = jax.lax.pmean(hot_in_new, axis_name)
+        hot_out_new = jax.lax.pmean(hot_out_new, axis_name)
 
-        new_in, new_out = be.update(w_in_work, w_out_work, step, static)
-
-        hot_in_new = jax.lax.pmean(new_in[:hot], axis_name)
-        hot_out_new = jax.lax.pmean(new_out[:hot], axis_name)
-
-        # owner-side scatter: sum the updated replicas of each touched row,
-        # add (n - k) copies of the pre-step value for the replicas that
-        # never requested it, divide by n — the Hogwild mean
         tgt = jnp.where(mine, lidx, cps).reshape(-1)     # cps -> dropped
         kcnt = jnp.zeros((cps,), jnp.float32).at[tgt].add(
             mine.reshape(-1).astype(jnp.float32), mode="drop")
@@ -275,12 +315,53 @@ def vocab_sharded_update(backend: str, static: KernelStatic, placement,
             contrib = jnp.where(mine[..., None], upd_all, 0.0)
             acc = jnp.zeros_like(cold).at[tgt].add(
                 contrib.reshape(-1, contrib.shape[-1]), mode="drop")
-            touched = kcnt[:, None] > 0
-            return jnp.where(
-                touched, (acc + (n - kcnt)[:, None] * cold) / n, cold)
+            return hogwild_mean(cold, acc, kcnt)
 
-        cold_in_new = write_back(cold_in, new_in[hot:])
-        cold_out_new = write_back(cold_out, new_out[hot:])
+        cold_in_new = write_back(cold_in, new_got_in)
+        cold_out_new = write_back(cold_out, new_got_out)
         return hot_in_new, hot_out_new, cold_in_new, cold_out_new
 
-    return run
+    def run_exact(hot_in, hot_out, cold_in, cold_out, step: StepInputs):
+        r_width = step.cold_ids.shape[-1]                # R (static)
+        req = step.bucket_ids[0]                         # (n, C) by owner
+        pos = step.bucket_pos[0]                         # (n, C), pad = R
+        # swap requester<->owner axes: got_req[s] = the bucket shard s
+        # addressed to me — the only rows I must serve
+        got_req = jax.lax.all_to_all(req, axis_name, 0, 0)
+        serve = got_req >= 0
+        lrow = jnp.where(serve, (got_req - hot) // n, 0)  # local rows
+
+        def gather(cold):
+            served = jnp.where(serve[..., None], cold[lrow], 0.0)  # (n,C,d)
+            vals = jax.lax.all_to_all(served, axis_name, 0, 0)
+            # vals[o, c] is the value of req[o, c]; land it at its first-
+            # seen position in the gathered working block (pads drop)
+            return jnp.zeros((r_width, cold.shape[-1]), cold.dtype).at[
+                pos.reshape(-1)].set(
+                    vals.reshape(-1, vals.shape[-1]), mode="drop")
+
+        hot_in_new, hot_out_new, new_got_in, new_got_out = compute(
+            hot_in, hot_out, gather(cold_in), gather(cold_out), step)
+        hot_in_new = jax.lax.pmean(hot_in_new, axis_name)
+        hot_out_new = jax.lax.pmean(hot_out_new, axis_name)
+
+        tgt = jnp.where(serve, lrow, cps).reshape(-1)    # cps -> dropped
+        kcnt = jnp.zeros((cps,), jnp.float32).at[tgt].add(
+            serve.reshape(-1).astype(jnp.float32), mode="drop")
+        reqv = req >= 0
+        pos_c = jnp.where(reqv, pos, 0)
+
+        def write_back(cold, new_rows):
+            upd = jnp.where(reqv[..., None], new_rows[pos_c], 0.0)  # (n,C,d)
+            back = jax.lax.all_to_all(upd, axis_name, 0, 0)
+            # back[s] holds shard s's updated replicas of rows I own, in
+            # the same slots as got_req[s]
+            acc = jnp.zeros_like(cold).at[tgt].add(
+                back.reshape(-1, back.shape[-1]), mode="drop")
+            return hogwild_mean(cold, acc, kcnt)
+
+        cold_in_new = write_back(cold_in, new_got_in)
+        cold_out_new = write_back(cold_out, new_got_out)
+        return hot_in_new, hot_out_new, cold_in_new, cold_out_new
+
+    return run_exact if exchange == "exact" else run_dense

@@ -36,11 +36,13 @@ class StepInputs:
     and shard_map directly). ``plan_*`` carry the host tile schedule
     (``repro.data.batching.plan_tiles``) and are all-or-none: present for
     the window-tiled backends, ``None`` for the sequential ones.
-    ``cold_ids`` carries the vocab-sharding exchange plan
-    (``repro.distributed.vocab_placement.plan_exchange``): when present,
-    the token/negative/plan arrays are remapped into per-shard working-
-    table space and the step must run under a mesh session
-    (``ops.vocab_sharded_update``), not plain ``sgns_update``."""
+    ``cold_ids``/``bucket_ids``/``bucket_pos`` carry the vocab-sharding
+    exchange plan (``repro.distributed.vocab_placement.plan_exchange``):
+    when present, the token/negative/plan arrays are remapped into
+    per-shard working-table space, ``bucket_*`` hold the per-owner
+    capacity buckets the request-exact ``all_to_all`` exchange routes, and
+    the step must run under a mesh session (``ops.vocab_sharded_update``),
+    not plain ``sgns_update``."""
     tokens: jax.Array                       # (S, L) int32
     negs: jax.Array                         # (S, L, N) int32
     lengths: jax.Array                      # (S,) int32
@@ -50,6 +52,8 @@ class StepInputs:
     plan_ucount: Optional[jax.Array] = None   # (S, nt) int32
     plan_strict: Optional[jax.Array] = None   # (S, nt) int32
     cold_ids: Optional[jax.Array] = None      # (n_shards, R) int32, -1 pad
+    bucket_ids: Optional[jax.Array] = None    # (n, n, C) int32, -1 pad
+    bucket_pos: Optional[jax.Array] = None    # (n, n, C) int32, R pad
 
     @property
     def has_plan(self) -> bool:
@@ -91,7 +95,8 @@ class StepInputs:
 jax.tree_util.register_dataclass(
     StepInputs,
     data_fields=["tokens", "negs", "lengths", "lr", "plan_uniq",
-                 "plan_scatter", "plan_ucount", "plan_strict", "cold_ids"],
+                 "plan_scatter", "plan_ucount", "plan_strict", "cold_ids",
+                 "bucket_ids", "bucket_pos"],
     meta_fields=[])
 
 
@@ -112,6 +117,14 @@ class KernelStatic:
 UpdateFn = Callable[[jax.Array, jax.Array, StepInputs, KernelStatic],
                     Tuple[jax.Array, jax.Array]]
 
+# update_fused(hot_in, hot_out, got_in, got_out, step, static) -> 4-tuple:
+# the vocab-sharded working table handed to the kernel *split* — hot
+# replica and gathered cold block stay separate HBM buffers and the kernel
+# streams rows from whichever side owns them (no concat materialization)
+FusedUpdateFn = Callable[
+    [jax.Array, jax.Array, jax.Array, jax.Array, StepInputs, KernelStatic],
+    Tuple[jax.Array, jax.Array, jax.Array, jax.Array]]
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelBackend:
@@ -128,6 +141,15 @@ class KernelBackend:
     requires_tpu: bool = False        # compiles natively only on TPU
     tiled_variant: Optional[str] = None      # name of the tiled counterpart
     interpret_variant: Optional[str] = None  # interpret-mode escape hatch
+    update_fused: Optional[FusedUpdateFn] = None  # split-table entry point
+
+    @property
+    def supports_fused_gather(self) -> bool:
+        """Whether the vocab-sharded step can hand this backend the hot
+        replica and the gathered cold rows as separate buffers, fusing the
+        cold-row fetch into the kernel's DMA stream instead of paying a
+        ``concat(hot, gathered)`` materialization per step (§8)."""
+        return self.update_fused is not None
 
 
 _REGISTRY: Dict[str, KernelBackend] = {}

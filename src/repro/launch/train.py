@@ -41,7 +41,7 @@ def run_w2v(args) -> int:
                     prefetch_workers=args.prefetch_workers,
                     prefetch_depth=args.prefetch_depth,
                     prefetch_mode=args.prefetch_mode,
-                    vocab_shard=args.vocab_shard,
+                    vocab_shard=bool(args.vocab_shard),
                     hot_vocab_frac=args.hot_vocab_frac)
     words_per_cluster = max(args.vocab // args.clusters, 1)
     corpus = synthetic_cluster_corpus(
@@ -56,7 +56,16 @@ def run_w2v(args) -> int:
               f"mode={pipe.mode})")
     else:
         print("pipeline=sync")
-    trainer = TrainSession(pipe, cfg, backend=args.backend,
+    mesh = None
+    if args.vocab_shard > 1:
+        from repro.launch.mesh import make_host_mesh
+        if jax.device_count() < args.vocab_shard:
+            print(f"error: --vocab-shard {args.vocab_shard} needs "
+                  f"{args.vocab_shard} devices, have {jax.device_count()}",
+                  file=sys.stderr)
+            return 2
+        mesh = make_host_mesh(model=1)
+    trainer = TrainSession(pipe, cfg, backend=args.backend, mesh=mesh,
                            ckpt_dir=args.ckpt_dir,
                            ckpt_every=args.ckpt_every)
     print(f"backend={trainer.backend}")
@@ -144,11 +153,14 @@ def main() -> int:
                    choices=("thread", "process"),
                    help="worker kind: threads (numpy finalize releases the "
                         "GIL) or processes (python-heavy encode)")
-    w.add_argument("--vocab-shard", action="store_true",
+    w.add_argument("--vocab-shard", type=int, nargs="?", const=1, default=0,
+                   metavar="N",
                    help="replicate the Zipf-hot vocabulary head and shard "
                         "the cold tail over the mesh data axis "
                         "(DESIGN.md §8); scales trainable vocabulary with "
-                        "device count")
+                        "device count. With a value N > 1, runs over N "
+                        "shards (on CPU, N fake host devices are "
+                        "synthesized); bare flag = 1-shard layout")
     w.add_argument("--hot-vocab-frac", type=float, default=0.0,
                    help="replicated hot head as a fraction of V "
                         "(0: smallest prefix covering ~90%% of corpus "
@@ -180,6 +192,14 @@ def main() -> int:
     l.set_defaults(fn=run_lm)
 
     args = ap.parse_args()
+    if getattr(args, "vocab_shard", 0) > 1:
+        # synthesize the fake host devices the sharded run needs BEFORE
+        # jax initializes its backends (first devices()/dispatch call);
+        # import order alone has not initialized them yet
+        import os
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.vocab_shard}")
     return args.fn(args)
 
 

@@ -6,7 +6,8 @@ import numpy as np
 from hypothesis import given, settings
 
 from repro.data.batching import plan_tiles
-from repro.kernels.fullw2v import fullw2v_pallas, fullw2v_pallas_tiled
+from repro.kernels.fullw2v import (fullw2v_pallas, fullw2v_pallas_tiled,
+                                   fullw2v_pallas_tiled_fused)
 from repro.kernels.ref import batch_sgns_ref, batch_sgns_tiled_ref
 from tests.conftest import make_distinct_negs
 
@@ -132,6 +133,39 @@ def test_tiled_relaxation_is_small(rng):
     diff = np.abs(np.asarray(a_in) - np.asarray(b_in)).max()
     assert diff < 1e-2, diff
     assert np.isfinite(np.asarray(b_in)).all()
+
+
+def test_fused_split_table_bit_identical_to_concat(rng):
+    """DESIGN.md §8 fused gather: the split-table kernel (hot replica +
+    gathered cold block, double-buffered cold-row prefetch) must be
+    bit-identical to the plain tiled kernel on ``concat(hot, got)`` — on a
+    small strict-heavy batch (sequential replay path) and on a larger
+    mostly-collision-free batch with the same cold row reused across tiles
+    (the prefetch-dedup predicate's hard case)."""
+    w_f, tile, N, d = 2, 4, 3, 128
+    for V, hot, L in ((30, 7, 10), (600, 17, 16)):
+        w_in, w_out, tokens, negs = _make(rng, V, d, 2, L, N)
+        if V > 100:
+            # same cold working row in two tiles of one sentence, and a
+            # token also appearing as another tile's negative
+            negs[0, 1, 0] = negs[0, 2 * tile + 1, 0] = hot + 3
+            negs[1, tile, 1] = tokens[1, 0]
+        lengths = np.array([L, L - 3], np.int32)
+        plan = plan_tiles(tokens, negs, lengths, tile)
+        pa = [jnp.asarray(x) for x in (plan.uniq, plan.scatter,
+                                       plan.ucount, plan.strict)]
+        common = (jnp.asarray(tokens), jnp.asarray(negs),
+                  jnp.asarray(lengths), jnp.float32(0.05), w_f, tile, *pa)
+        r_in, r_out = fullw2v_pallas_tiled(
+            jnp.asarray(w_in), jnp.asarray(w_out), *common, interpret=True)
+        f = fullw2v_pallas_tiled_fused(
+            jnp.asarray(w_in[:hot]), jnp.asarray(w_out[:hot]),
+            jnp.asarray(w_in[hot:]), jnp.asarray(w_out[hot:]),
+            *common, interpret=True)
+        np.testing.assert_array_equal(np.asarray(r_in),
+                                      np.concatenate([f[0], f[2]]))
+        np.testing.assert_array_equal(np.asarray(r_out),
+                                      np.concatenate([f[1], f[3]]))
 
 
 def test_trainer_tile_windows_end_to_end():

@@ -196,6 +196,88 @@ def test_w2v_vocab_shard_mesh_parity(subproc):
     assert "OK T=1" in r.stdout and "OK T=4" in r.stdout
 
 
+def test_w2v_vocab_shard_exchange_flavors_agree(subproc):
+    """Request-exact bucketed all_to_all vs the dense all_gather +
+    psum_scatter exchange on a 4-way mesh: same training, different
+    collective schedule — hot head bit-identical, cold tail within the §8
+    float tolerance (summation order differs across schedules)."""
+    r = subproc("""
+        import numpy as np, jax
+        assert jax.device_count() == 4
+        from repro.configs.w2v import smoke
+        from repro.data.corpus import synthetic_cluster_corpus
+        from repro.data.batching import BatchingPipeline
+        from repro.core.trainer import TrainSession
+        from repro.launch.mesh import make_host_mesh
+
+        corpus = synthetic_cluster_corpus(n_clusters=8, words_per_cluster=16,
+                                          n_sentences=400, mean_len=12,
+                                          seed=0)
+        mesh = make_host_mesh(model=1)
+        cfg_vs = smoke(dim=32, sentences_per_batch=64, vocab_shard=True,
+                       hot_vocab_frac=0.25)
+        pipe = BatchingPipeline(corpus, cfg_vs)
+        runs = {}
+        for flavor in ("dense", "exact"):
+            s = TrainSession(BatchingPipeline(corpus, cfg_vs,
+                                              vocab=pipe.vocab),
+                             cfg_vs, backend="jnp", mesh=mesh,
+                             exchange=flavor)
+            s.train(max_batches=4)
+            runs[flavor] = (s.embeddings(), s.placement)
+        (ea, pl), (eb, _) = runs["dense"], runs["exact"]
+        assert pl.n_shards == 4
+        assert (ea[:pl.hot] == eb[:pl.hot]).all(), "hot head diverged"
+        np.testing.assert_allclose(ea[pl.hot:], eb[pl.hot:],
+                                   atol=1e-6, rtol=1e-5)
+        print("OK flavors", float(np.abs(ea[pl.hot:] - eb[pl.hot:]).max()))
+    """, n_devices=4)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK flavors" in r.stdout
+
+
+def test_w2v_vocab_shard_fused_gather_mesh(subproc):
+    """The fused-gather tiled backend (split-table DMA stream) trains on a
+    real 2-shard mesh under both exchange flavors and agrees with itself:
+    hot bitwise, cold within tolerance. Interpret mode, so sizes are kept
+    tiny."""
+    r = subproc("""
+        import numpy as np, jax
+        assert jax.device_count() == 2
+        from repro.configs.w2v import smoke
+        from repro.data.corpus import synthetic_cluster_corpus
+        from repro.data.batching import BatchingPipeline
+        from repro.core.trainer import TrainSession
+        from repro.kernels import registry
+        from repro.launch.mesh import make_host_mesh
+
+        assert registry.get("pallas_tiled_interpret").supports_fused_gather
+        corpus = synthetic_cluster_corpus(n_clusters=4, words_per_cluster=16,
+                                          n_sentences=40, mean_len=10,
+                                          seed=0)
+        mesh = make_host_mesh(model=1)
+        cfg_vs = smoke(dim=128, sentences_per_batch=4, max_sentence_len=16,
+                       tile_windows=4, vocab_shard=True, hot_vocab_frac=0.25)
+        pipe = BatchingPipeline(corpus, cfg_vs)
+        runs = {}
+        for flavor in ("dense", "exact"):
+            s = TrainSession(BatchingPipeline(corpus, cfg_vs,
+                                              vocab=pipe.vocab),
+                             cfg_vs, backend="pallas_tiled_interpret",
+                             mesh=mesh, exchange=flavor)
+            s.train(max_batches=1)
+            runs[flavor] = (s.embeddings(), s.placement)
+        (ea, pl), (eb, _) = runs["dense"], runs["exact"]
+        assert pl.n_shards == 2
+        assert (ea[:pl.hot] == eb[:pl.hot]).all(), "hot head diverged"
+        np.testing.assert_allclose(ea[pl.hot:], eb[pl.hot:],
+                                   atol=1e-6, rtol=1e-5)
+        print("OK fused mesh", pl.hot)
+    """, n_devices=2, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK fused mesh" in r.stdout
+
+
 def test_w2v_vocab_shard_mesh_checkpoint_to_replicated(subproc):
     """A split-table checkpoint written on a 4-shard mesh restores into a
     single-device replicated session with identical embeddings."""

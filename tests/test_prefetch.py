@@ -37,6 +37,13 @@ def _same_stream(a, b):
             assert np.array_equal(x.plan.scatter, y.plan.scatter)
             assert np.array_equal(x.plan.ucount, y.plan.ucount)
             assert np.array_equal(x.plan.strict, y.plan.strict)
+        assert (x.exchange is None) == (y.exchange is None)
+        if x.exchange is not None:
+            ex, ey = x.exchange, y.exchange
+            assert ex.placement == ey.placement
+            for f in ("tokens", "negs", "cold_ids", "bucket_ids",
+                      "bucket_pos"):
+                assert np.array_equal(getattr(ex, f), getattr(ey, f)), f
 
 
 def test_async_bitwise_equals_sync_any_worker_count():
@@ -62,6 +69,26 @@ def test_async_tiled_stream_packed_equals_sync():
     apipe = AsyncBatchingPipeline(corpus, cfg, vocab=sync.vocab,
                                   workers=3, depth=2)
     _same_stream(ref, list(apipe.batches(pad_len=32, epoch=1)))
+
+
+@pytest.mark.parametrize("mode", ["thread", "process"])
+def test_async_carries_worker_planned_exchange(mode):
+    """A placement-aware pipeline attaches the vocab-sharding exchange plan
+    (request lists + capacity buckets) in the finalize workers — both
+    worker kinds — bit-identically to the synchronous pipeline."""
+    from repro.distributed.vocab_placement import VocabPlacement
+
+    cfg = _cfg(vocab_shard=True)
+    corpus = _corpus()
+    sync = BatchingPipeline(corpus, cfg)
+    sync.placement = VocabPlacement.plan(sync.vocab.counts, 2, hot_frac=0.2)
+    ref = list(sync.batches(pad_len=32, epoch=0))
+    assert ref[0].exchange is not None
+    assert ref[0].exchange.bucket_ids is not None
+    apipe = AsyncBatchingPipeline(corpus, cfg, vocab=sync.vocab,
+                                  workers=2, depth=2, mode=mode)
+    apipe.placement = sync.placement
+    _same_stream(ref, list(apipe.batches(pad_len=32, epoch=0)))
 
 
 def test_epochs_draw_distinct_randomness():

@@ -2,11 +2,14 @@
 planning, single-device parity with the replicated path, split-table
 checkpoints, and engine capability gating. Multi-device parity lives in
 ``test_multidevice.py`` (subprocess meshes)."""
+import hypothesis.strategies as st
 import numpy as np
 import pytest
+from hypothesis import given, settings
 
 from repro.configs.w2v import smoke
-from repro.data.batching import BatchingPipeline, first_seen_unique
+from repro.data.batching import (Batch, BatchingPipeline, first_seen_unique,
+                                 plan_tiles)
 from repro.data.corpus import synthetic_cluster_corpus
 from repro.distributed.vocab_placement import (VocabPlacement, plan_exchange)
 
@@ -145,6 +148,121 @@ def test_exchange_volume_is_distinct_rows_not_v():
 
 
 # ---------------------------------------------------------------------------
+# Capacity buckets (the request-exact all_to_all schedule)
+# ---------------------------------------------------------------------------
+
+def _manual_batch(tokens, negs, tile=0):
+    """A hand-built Batch: full-length sentences, optional tile plan."""
+    tokens = np.asarray(tokens, dtype=np.int32)
+    negs = np.asarray(negs, dtype=np.int32)
+    lengths = np.full(tokens.shape[0], tokens.shape[1], dtype=np.int32)
+    plan = plan_tiles(tokens, negs, lengths, tile) if tile > 1 else None
+    return Batch(tokens=tokens, negs=negs, lengths=lengths,
+                 n_words=int(lengths.sum()), plan=plan)
+
+
+def make_distinct_negs_static(row, hot):
+    """Hot negatives distinct from their target (deterministic)."""
+    n = 3
+    out = np.empty((row.size, n), dtype=np.int32)
+    for i, t in enumerate(row):
+        pool = [v for v in range(hot) if v != t]
+        out[i] = pool[:n]
+    return out
+
+
+def test_plan_exchange_all_hot_batch():
+    """A batch touching no cold rows still yields a well-formed (empty)
+    plan: minimum-capacity buckets, all slots padding, exact <= dense."""
+    pl = VocabPlacement(vocab_size=20, hot=19, n_shards=2)
+    tokens = np.tile(np.arange(6), (2, 1))            # ids 0..5: all hot
+    negs = np.stack([make_distinct_negs_static(t, 19) for t in tokens])
+    batch = _manual_batch(tokens, negs)
+    ex = plan_exchange(batch, pl)
+    assert ex.n_distinct == [0, 0]
+    assert (ex.cold_ids == -1).all()
+    np.testing.assert_array_equal(ex.tokens, tokens)  # hot remap = identity
+    np.testing.assert_array_equal(ex.negs, negs)
+    assert (ex.bucket_ids == -1).all()
+    assert ex.bucket_capacity == 8                    # _BUCKET_PAD floor
+    assert (ex.bucket_pos == ex.request_width).all()  # every slot drops
+    assert ex.bytes_device_exact(16) <= ex.bytes_device_dense(16)
+
+
+def test_plan_exchange_single_cold_row():
+    pl = VocabPlacement(vocab_size=20, hot=10, n_shards=2)
+    tokens = np.array([[1, 15, 2, 3], [4, 5, 6, 7]])  # one cold id: 15
+    negs = np.stack([make_distinct_negs_static(t, 10) for t in tokens])
+    ex = plan_exchange(_manual_batch(tokens, negs), pl)
+    assert ex.n_distinct == [1, 0]
+    assert ex.cold_ids[0, 0] == 15 and (ex.cold_ids[0, 1:] == -1).all()
+    assert ex.tokens[0, 1] == pl.hot  # first request -> working row hot+0
+    owner = (15 - pl.hot) % 2
+    assert ex.bucket_ids[0, owner, 0] == 15
+    assert ex.bucket_pos[0, owner, 0] == 0
+    mask = np.ones_like(ex.bucket_ids, dtype=bool)
+    mask[0, owner, 0] = False
+    assert (ex.bucket_ids[mask] == -1).all()
+    assert (ex.bucket_pos[mask] == ex.request_width).all()
+
+
+def test_duplicate_negatives_across_tiles_request_once():
+    """A cold negative repeated in two different window tiles is fused by
+    the tile plan AND requested once by the exchange — both plan_uniq
+    occurrences remap to the same working row."""
+    pl = VocabPlacement(vocab_size=20, hot=10, n_shards=2)
+    tokens = np.tile(np.array([1, 2, 3, 4, 5, 6, 7, 8]), (2, 1))
+    negs = np.stack([make_distinct_negs_static(t, 10) for t in tokens])
+    negs[0, 0, 0] = 17    # tile 0 (windows 0-1)
+    negs[0, 5, 0] = 17    # tile 2 (windows 4-5): same cold id, new tile
+    batch = _manual_batch(tokens, negs, tile=2)
+    assert (batch.plan.uniq[0] == 17).sum() == 2   # once per touching tile
+    ex = plan_exchange(batch, pl)
+    assert ex.n_distinct[0] == 1
+    assert list(ex.cold_ids[0][ex.cold_ids[0] >= 0]) == [17]
+    # every remapped occurrence points at the single gathered row
+    assert (ex.plan_uniq[0][batch.plan.uniq[0] == 17] == pl.hot).all()
+    assert (ex.negs[0][negs[0] == 17] == pl.hot).all()
+
+
+@given(st.integers(40, 200),        # vocab
+       st.sampled_from([1, 2, 4]),  # shards
+       st.integers(0, 99))          # seed
+@settings(max_examples=12, deadline=None)
+def test_bucket_capacity_covers_every_request_list(vocab, n, seed):
+    """Property: ownership buckets partition each shard's request list —
+    capacities cover the per-owner counts, valid entries are exactly the
+    owner's subset in first-seen order, and the position scatter
+    reconstructs the request list (the device-side gather's correctness
+    precondition)."""
+    rng = np.random.default_rng(seed)
+    pl = VocabPlacement(vocab_size=vocab, hot=max(vocab // 8, 1), n_shards=n)
+    S, L, N = 2 * n, 12, 3
+    tokens = rng.integers(0, vocab, size=(S, L)).astype(np.int32)
+    negs = rng.integers(0, vocab, size=(S, L, N)).astype(np.int32)
+    ex = plan_exchange(_manual_batch(tokens, negs), pl)
+    for s in range(n):
+        li = ex.cold_ids[s][:ex.n_distinct[s]].astype(np.int64)
+        owners = (li - pl.hot) % n
+        rebuilt = np.full(ex.request_width + 1, -1, dtype=np.int64)
+        positions = []
+        for o in range(n):
+            ids_so = ex.bucket_ids[s, o]
+            valid = ids_so >= 0
+            assert valid.sum() == (owners == o).sum() <= ex.bucket_capacity
+            # -1 padding is a suffix; entries = owner-o subset, in order
+            assert not valid[np.argmin(valid):].any() or valid.all()
+            np.testing.assert_array_equal(ids_so[valid], li[owners == o])
+            pos = ex.bucket_pos[s, o]
+            assert (pos[~valid] == ex.request_width).all()
+            rebuilt[pos[valid]] = ids_so[valid]
+            positions.extend(pos[valid].tolist())
+        # scatter round-trip: gathered rows land in request order
+        np.testing.assert_array_equal(rebuilt[:ex.n_distinct[s]], li)
+        assert sorted(positions) == list(range(ex.n_distinct[s]))
+
+
+# ---------------------------------------------------------------------------
 # Single-device training parity (the N-device analogue is subprocess-bound
 # and lives in test_multidevice.py)
 # ---------------------------------------------------------------------------
@@ -175,6 +293,27 @@ def test_single_device_sharded_training_bit_identical(tile_windows):
     full_out = b.placement.merge(np.asarray(b.state.w_out),
                                  np.asarray(b.state.cold_out))
     np.testing.assert_array_equal(np.asarray(a.state.w_out), full_out)
+
+
+def test_exchange_dense_and_exact_bit_identical():
+    """The request-exact bucketed all_to_all and the dense all_gather +
+    psum_scatter exchange are two schedules of the same math: final split
+    tables must match bit-for-bit (DESIGN.md §8 exchange contract)."""
+    from repro.core.trainer import TrainSession
+    cfg, pipe = _pipeline()
+    cfg_vs = smoke(dim=16, sentences_per_batch=64, vocab_shard=True,
+                   hot_vocab_frac=0.3)
+    sessions = []
+    for flavor in ("dense", "exact"):
+        s = TrainSession(BatchingPipeline(pipe.corpus, cfg_vs,
+                                          vocab=pipe.vocab),
+                         cfg_vs, backend="jnp", exchange=flavor)
+        s.train(max_batches=3)
+        sessions.append(s)
+    a, b = sessions
+    np.testing.assert_array_equal(a.embeddings(), b.embeddings())
+    np.testing.assert_array_equal(np.asarray(a.state.cold_out),
+                                  np.asarray(b.state.cold_out))
 
 
 def test_sharded_session_reports_split_param_tree():
