@@ -1,0 +1,40 @@
+"""Recovery metrics under the deterministic chaos schedules (DESIGN.md §9).
+
+Two rows:
+
+  * ``resilience/ci``    — the full ``ci`` fault schedule (step exceptions,
+    worker kill, checkpoint truncation, NaN injection). Derived fields
+    carry ``digest_match`` (must be 1 — recovery is bit-exact), restart /
+    rollback / quarantine counts, total ``recovery_seconds``, and pool
+    ``heals``.
+  * ``resilience/clean`` — the same workload supervised but fault-free:
+    the supervision overhead witness (``restarts`` must be 0 and
+    ``digest_match`` 1; ``wall_seconds`` vs the ci row bounds what the
+    fault handling itself cost).
+
+``benchmarks/compare.py`` gates these: ``digest_match`` must be 1 on the
+current run, and ``restarts`` / ``recovery_seconds`` must not grow vs the
+baseline trajectory.
+"""
+from __future__ import annotations
+
+
+def _row(name: str, result: dict) -> str:
+    us = result["wall_seconds"] * 1e6
+    derived = (f"digest_match={result['digest_match']} "
+               f"restarts={result['restarts']} "
+               f"rollbacks={result['rollbacks']} "
+               f"health_failures={result['health_failures']} "
+               f"ckpt_quarantined={result['ckpt_quarantined']} "
+               f"heals={result['heals']} "
+               f"batches_skipped={result['batches_skipped']} "
+               f"recovery_seconds={result['recovery_seconds']} "
+               f"wall_seconds={result['wall_seconds']}")
+    return f"{name},{us:.1f},{derived}"
+
+
+def run():
+    from repro.train.chaos import SCHEDULES, run_chaos
+
+    yield _row("resilience/ci", run_chaos(SCHEDULES["ci"]))
+    yield _row("resilience/clean", run_chaos(SCHEDULES["none"]))

@@ -16,6 +16,12 @@ Two classes of check, mirroring the repo's standing gates:
     on the current run alone, ``exchange_bytes`` must never exceed its
     ``exchange_bytes_dense`` sibling — request-exact exceeding the dense
     collectives means the bucket planner's padding regressed.
+  * **resilience** — any row carrying ``digest_match`` (the
+    bench_resilience chaos rows) must report 1 on the *current* run alone
+    (recovery is bit-exact, DESIGN.md §9); ``restarts`` must not exceed
+    the baseline's (fault schedules are deterministic, so more restarts
+    means the recovery loop started thrashing), and ``recovery_seconds``
+    must not grow by more than ``--max-recovery-growth``.
 
 Exit status is the contract: 0 = gate passed (including the bootstrap case
 of no baseline files), 1 = regression. ``--simulate-regression 0.25`` scales
@@ -104,6 +110,49 @@ def check_exchange(baseline: Dict[str, dict], current: Dict[str, dict],
     return failures
 
 
+def check_resilience(baseline: Dict[str, dict], current: Dict[str, dict],
+                     max_recovery_growth: float) -> List[str]:
+    failures = []
+    for name, cur in sorted(current.items()):
+        match = cur.get("digest_match")
+        if not isinstance(match, (int, float)):
+            continue
+        if match != 1:
+            print(f"  [REGRESSED] {name}: digest_match={match:.0f} — "
+                  f"recovery is no longer bit-exact")
+            failures.append(f"{name}: chaos recovery digest mismatch")
+            continue
+        base = baseline.get(name, {})
+        restarts, base_restarts = cur.get("restarts"), base.get("restarts")
+        if (isinstance(restarts, (int, float))
+                and isinstance(base_restarts, (int, float))
+                and restarts > base_restarts):
+            print(f"  [REGRESSED] {name}: restarts {base_restarts:.0f} -> "
+                  f"{restarts:.0f} on a deterministic fault schedule")
+            failures.append(
+                f"{name}: restarts grew {base_restarts:.0f} -> "
+                f"{restarts:.0f} (recovery loop thrashing)")
+            continue
+        rec, base_rec = (cur.get("recovery_seconds"),
+                         base.get("recovery_seconds"))
+        if (isinstance(rec, (int, float)) and isinstance(
+                base_rec, (int, float)) and base_rec > 0):
+            ratio = rec / base_rec
+            ok = ratio <= 1.0 + max_recovery_growth
+            print(f"  [{'ok' if ok else 'REGRESSED'}] {name}: "
+                  f"recovery {base_rec:.3f}s -> {rec:.3f}s "
+                  f"({(ratio - 1) * 100:+.0f}%)")
+            if not ok:
+                failures.append(
+                    f"{name}: recovery_seconds grew "
+                    f"{(ratio - 1) * 100:.0f}% "
+                    f"(> {max_recovery_growth * 100:.0f}% allowed)")
+            continue
+        print(f"  [ok] {name}: digest_match=1"
+              + ("" if base else " (no baseline)"))
+    return failures
+
+
 def check_quality(current: Dict[str, dict], quality_delta: float,
                   max_tile: int) -> List[str]:
     failures = []
@@ -142,6 +191,11 @@ def main() -> int:
                     help="allowed fractional exchange_bytes growth vs "
                          "baseline (0.20=20%%); the exact<=dense invariant "
                          "is checked regardless")
+    ap.add_argument("--max-recovery-growth", type=float, default=1.0,
+                    help="allowed fractional recovery_seconds growth vs "
+                         "baseline (1.0=100%%; recovery time is wall-clock "
+                         "noisy); digest_match and restart counts are "
+                         "checked strictly regardless")
     ap.add_argument("--simulate-regression", type=float, default=0.0,
                     help="scale current words_per_sec down by this fraction "
                          "(gate-failure demonstration only)")
@@ -170,6 +224,9 @@ def main() -> int:
                               args.quality_max_tile)
     print("perf-gate: exchange traffic (request-exact bytes)")
     failures += check_exchange(baseline, current, args.max_exchange_growth)
+    print("perf-gate: resilience (chaos recovery, bit-exact + bounded)")
+    failures += check_resilience(baseline, current,
+                                 args.max_recovery_growth)
 
     if failures:
         print("\nperf-gate FAILED:", file=sys.stderr)

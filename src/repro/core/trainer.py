@@ -30,8 +30,9 @@ exchange host-side; ``ops.vocab_sharded_update`` runs it under
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
-from typing import Callable, Dict, Iterator, Optional
+from typing import Callable, Dict, Iterator, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +43,8 @@ from repro.configs.w2v import W2VConfig
 from repro.data.batching import Batch, BatchingPipeline
 from repro.kernels import ops, registry
 from repro.kernels.registry import StepInputs
+
+log = logging.getLogger("repro.trainer")
 
 
 @dataclasses.dataclass
@@ -79,7 +82,9 @@ class StepMetrics:
     this batch from the host pipeline — the overlap-efficiency signal: with
     prefetch on it should collapse toward zero while the device stays busy.
     ``queue_depth`` is the async pipeline's ready-batch depth when this
-    batch was taken (-1 for synchronous pipelines).
+    batch was taken (-1 for synchronous pipelines). ``skipped`` marks a
+    poison batch the supervisor excised (counters advanced, tables
+    untouched — DESIGN.md §9).
     """
     epoch: int
     batches_seen: int
@@ -89,6 +94,7 @@ class StepMetrics:
     backend: str
     fetch_seconds: float = 0.0
     queue_depth: int = -1
+    skipped: bool = False
 
 
 def init_state(vocab_size: int, cfg: W2VConfig, seed: int = 0,
@@ -198,6 +204,12 @@ class TrainSession:
         self.wall_seconds = 0.0    # last train() wall time
         self.resumed_step: Optional[int] = None
         self._resume_skip = 0
+        # poison-batch excision (DESIGN.md §9): stream positions the
+        # supervisor decided to skip after a health rollback. Counters
+        # still advance (LR schedule + pipeline cursor unchanged); only
+        # the table update is excised. Skips are counted, never silent.
+        self.poison_skip: Set[Tuple[int, int]] = set()
+        self.batches_skipped = 0
         if ckpt_dir and resume:
             self._maybe_resume()
         if mesh is not None and not registry.get(self.backend).supports_mesh:
@@ -315,14 +327,25 @@ class TrainSession:
         ``current_lr()`` exactly because word counts are known host-side
         ahead of training."""
         lr = self.current_lr()
-        if step is None:
+        skipped = ((self.state.epoch, self.state.epoch_batch)
+                   in self.poison_skip)
+        if skipped:
+            self.batches_skipped += 1
+            log.warning(
+                "skipping poison batch (epoch %d, batch %d) — counters "
+                "advance, tables untouched (%d skipped so far)",
+                self.state.epoch, self.state.epoch_batch,
+                self.batches_skipped)
+        elif step is None:
             step = self._make_step(batch, lr)
         elif self.placement is not None and not step.has_vocab_shard:
             # a plain pre-built step carries un-remapped global ids; the
             # sharded path needs the exchange plan, so rebuild from the
             # host batch rather than crash (or silently corrupt) below
             step = self._make_step(batch, lr)
-        if self.placement is not None:
+        if skipped:
+            pass
+        elif self.placement is not None:
             st = self.state
             st.w_in, st.w_out, st.cold_in, st.cold_out = self._vs_update(
                 step.tile, step.cold_ids.shape[1],
@@ -343,7 +366,8 @@ class TrainSession:
             epoch=self.state.epoch, batches_seen=self.state.batches_seen,
             words_seen=self.state.words_seen, batch_words=batch.n_words,
             lr=lr, backend=self.backend, fetch_seconds=fetch_seconds,
-            queue_depth=getattr(self.pipeline, "ready_depth", -1))
+            queue_depth=getattr(self.pipeline, "ready_depth", -1),
+            skipped=skipped)
         if (self.ckpt_dir and self.ckpt_every
                 and self.state.batches_seen % self.ckpt_every == 0):
             self.save_checkpoint()
@@ -435,6 +459,27 @@ class TrainSession:
         self.words_per_sec = ((self.state.words_seen - words0) / dt
                               if dt else 0.0)
         return self.state
+
+    def train_resilient(self, **kwargs) -> TrainState:
+        """Drive :meth:`stream` under the recovery supervisor: restore +
+        replay on step failure, health-probe rollback, watchdog timeouts,
+        restart budget with refill (``repro.train.supervisor``, DESIGN.md
+        §9). Keyword arguments go to :class:`TrainSupervisor`; the
+        supervisor's :class:`SupervisorReport` lands on
+        ``self.last_report``."""
+        from repro.train.supervisor import TrainSupervisor
+        sup = TrainSupervisor(self, **kwargs)
+        words0 = self.state.words_seen
+        self.fetch_seconds = 0.0
+        t0 = time.perf_counter()
+        state = sup.run()
+        jax.block_until_ready(self.state.w_in)
+        dt = time.perf_counter() - t0
+        self.wall_seconds = dt
+        self.words_per_sec = ((self.state.words_seen - words0) / dt
+                              if dt else 0.0)
+        self.last_report = sup.report
+        return state
 
     @property
     def device_busy_frac(self) -> float:
@@ -533,19 +578,49 @@ class TrainSession:
             self.state.w_out = tree["w_out"]
         return extra
 
+    def restore_latest(self) -> Optional[int]:
+        """Roll the session back to the newest *readable* checkpoint.
+        Corrupt/partial step directories are quarantined by the checkpoint
+        layer and skipped; with no usable checkpoint at all (or no
+        ``ckpt_dir``) the session re-initializes from the seed — keyed
+        randomness makes replay-from-scratch bit-exact too. Returns the
+        restored step, or None when starting over. Sets the pipeline
+        fast-forward so the next :meth:`stream` resumes mid-epoch exactly
+        where the checkpoint left off."""
+        from repro.train import checkpoint as ckpt
+        while True:
+            step = (ckpt.latest_step(self.ckpt_dir) if self.ckpt_dir
+                    else None)
+            if step is None:
+                log.warning("no usable checkpoint — re-initializing from "
+                            "seed %d", self.cfg.seed)
+                self.state = init_state(self.pipeline.vocab.size, self.cfg,
+                                        self.cfg.seed,
+                                        placement=self.placement,
+                                        mesh=self.mesh)
+                self._resume_skip = 0
+                self.resumed_step = None
+                return None
+            try:
+                extra = self._restore_tables(step)
+            except ckpt.CorruptCheckpoint:
+                # quarantined inside restore(); the next latest_step no
+                # longer sees it — fall back to the one before
+                continue
+            self.state.words_seen = int(extra.get("words_seen", 0))
+            self.state.batches_seen = int(extra.get("batches_seen", step))
+            cursor = ckpt.PipelineCursor.from_extra(extra)
+            self.state.epoch = cursor.epoch
+            self.state.epoch_batch = cursor.epoch_batch
+            self._resume_skip = cursor.epoch_batch
+            self.resumed_step = step
+            return step
+
     def _maybe_resume(self) -> None:
         from repro.train import checkpoint as ckpt
-        step = ckpt.latest_step(self.ckpt_dir)
-        if step is None:
-            return
-        extra = self._restore_tables(step)
-        self.state.words_seen = int(extra.get("words_seen", 0))
-        self.state.batches_seen = int(extra.get("batches_seen", step))
-        cursor = ckpt.PipelineCursor.from_extra(extra)
-        self.state.epoch = cursor.epoch
-        self.state.epoch_batch = cursor.epoch_batch
-        self._resume_skip = cursor.epoch_batch
-        self.resumed_step = step
+        if ckpt.latest_step(self.ckpt_dir) is None:
+            return   # fresh start: keep the init-state tables as built
+        self.restore_latest()
 
     # -- inference helpers ----------------------------------------------------
     def embeddings(self) -> np.ndarray:

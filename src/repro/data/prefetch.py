@@ -29,15 +29,30 @@ stalled device never piles up unbounded host memory.
 finalization is numpy (GIL released); ``mode="process"`` ships the vocab
 and alias table to worker processes once at pool start, for workloads
 where python-heavy encode/subsample dominates.
+
+Self-healing (DESIGN.md §9): a *killed* process worker breaks the whole
+pool (``BrokenProcessPool``) — instead of killing the epoch, the pipeline
+rebuilds the pool and recomputes every batch the dead pool still owed.
+Finalization is a pure function of ``(packed, cfg, epoch)``, so the
+recomputed batches are bit-identical and the emitted stream never changes
+(``PrefetchStats.heals`` counts pool rebuilds). A dead *producer* thread
+surfaces as a :class:`PipelineFault` on the consumer within a bounded
+poll interval — a recoverable step failure, never a hang. Task
+*exceptions* (the finalize function itself raising) still propagate:
+they are deterministic, so retrying them would fail identically.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import queue
 import threading
 import time
-from concurrent.futures import Executor, Future
+from concurrent.futures import (BrokenExecutor, CancelledError, Executor,
+                                Future)
 from typing import Iterator, List, Optional
+
+log = logging.getLogger("repro.prefetch")
 
 from repro.configs.w2v import W2VConfig
 from repro.data.batching import (Batch, BatchingPipeline, PackedBatch,
@@ -81,11 +96,28 @@ class _EndOfEpoch:
     error: Optional[BaseException] = None
 
 
+class PipelineFault(RuntimeError):
+    """The host pipeline died in a way a supervisor can recover from by
+    re-opening the stream (producer thread gone without its sentinel, or a
+    worker pool that could not be healed)."""
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One submitted finalize: the input kept alongside its future so a
+    broken pool can recompute the batch bit-identically."""
+    packed: PackedBatch
+    epoch: int
+    future: Future
+    gen: int        # executor generation the future was submitted to
+
+
 @dataclasses.dataclass
 class PrefetchStats:
     """Observability for the overlap benchmarks: queue depth over time and
-    the backpressure high-water mark."""
+    the backpressure high-water mark, plus the self-healing counter."""
     max_in_flight: int = 0          # most batches ever past the semaphore
+    heals: int = 0                  # worker pools rebuilt after breakage
     depth_samples: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -122,6 +154,11 @@ class AsyncBatchingPipeline(BatchingPipeline):
         # exposed for tests: the machinery of the most recent batches() call
         self._producer: Optional[threading.Thread] = None
         self._executor: Optional[Executor] = None
+        # pool-heal state: the lock serializes executor swap + submit, the
+        # generation counter tells a failed future whether its pool was
+        # already replaced (resubmit) or still needs healing (rebuild)
+        self._ex_lock = threading.Lock()
+        self._ex_gen = 0
 
     # -- executor ------------------------------------------------------------
     def _make_executor(self) -> Executor:
@@ -156,6 +193,61 @@ class AsyncBatchingPipeline(BatchingPipeline):
         return ex.submit(finalize_packed, packed, self.cfg, self.sampler,
                          epoch)
 
+    # -- pool healing --------------------------------------------------------
+    def _heal_locked(self) -> None:
+        """Replace a broken worker pool (caller holds ``_ex_lock``). The
+        dead pool's pending finalizes are recomputed by whoever owns their
+        ``_Pending`` — deterministic, so the stream stays bit-identical."""
+        try:
+            self._executor.shutdown(wait=False, cancel_futures=True)
+        except Exception:  # noqa: BLE001 — a broken pool may refuse even this
+            pass
+        self._executor = self._make_executor()
+        self._warm(self._executor)
+        self._ex_gen += 1
+        self.prefetch.heals += 1
+        log.warning("worker pool died — respawned (heal #%d)",
+                    self.prefetch.heals)
+
+    def _submit_pending(self, packed: PackedBatch, epoch: int) -> _Pending:
+        """Producer-side submit that survives a dead pool: heal and retry
+        once (a fresh pool that breaks immediately is a real fault)."""
+        with self._ex_lock:
+            try:
+                fut = self._submit(self._executor, packed, epoch)
+            except BrokenExecutor:
+                self._heal_locked()
+                fut = self._submit(self._executor, packed, epoch)
+            return _Pending(packed, epoch, fut, self._ex_gen)
+
+    def _result_healing(self, pend: _Pending) -> Batch:
+        """Consumer-side result that survives a dead pool: on breakage,
+        heal (unless another thread already did) and recompute this batch
+        on the fresh pool. Task exceptions propagate — deterministic
+        inputs would just fail again."""
+        retries = 0
+        while True:
+            try:
+                return pend.future.result()
+            except (BrokenExecutor, CancelledError) as e:
+                retries += 1
+                if retries > self.workers + 2:
+                    raise PipelineFault(
+                        f"worker pool kept dying ({retries} heals for one "
+                        f"batch)") from e
+                with self._ex_lock:
+                    if pend.gen == self._ex_gen:
+                        self._heal_locked()
+                    pend.future = self._submit(self._executor, pend.packed,
+                                               pend.epoch)
+                    pend.gen = self._ex_gen
+
+    def worker_pids(self) -> List[int]:
+        """Live process-pool worker pids (empty for thread mode) — the
+        chaos harness's kill target (``tools/chaos.py``)."""
+        procs = getattr(self._executor, "_processes", None)
+        return list(procs.keys()) if procs else []
+
     # -- the async stream ----------------------------------------------------
     def batches(self, pad_len: Optional[int] = None,
                 epoch: Optional[int] = None,
@@ -163,8 +255,8 @@ class AsyncBatchingPipeline(BatchingPipeline):
         """Same contract (and same bits) as the synchronous ``batches()``;
         production runs ahead on the worker pool, bounded by ``depth``."""
         epoch = self._resolve_epoch(epoch)
-        ex = self._make_executor()
-        self._warm(ex)   # worker spawn/init is setup, not steady state
+        self._executor = self._make_executor()
+        self._warm(self._executor)  # worker spawn/init is setup, not steady
         slots = threading.BoundedSemaphore(self.depth)
         out: "queue.Queue[object]" = queue.Queue()
         stop = threading.Event()
@@ -187,26 +279,36 @@ class AsyncBatchingPipeline(BatchingPipeline):
                         in_flight[0] += 1
                         self.prefetch.max_in_flight = max(
                             self.prefetch.max_in_flight, in_flight[0])
-                    out.put(self._submit(ex, packed, epoch))
+                    out.put(self._submit_pending(packed, epoch))
                 out.put(_EndOfEpoch())
             except BaseException as e:  # noqa: BLE001 — relayed to consumer
                 out.put(_EndOfEpoch(error=e))
 
         producer = threading.Thread(target=produce, name="w2v-producer",
                                     daemon=True)
-        self._producer, self._executor = producer, ex
+        self._producer = producer
         wall0 = time.perf_counter()
         stats_base = self.stats.seconds
         idle = 0.0   # suspended-in-consumer time while the pipeline was idle
         producer.start()
         try:
             while True:
-                item = out.get()
+                try:
+                    item = out.get(timeout=1.0)
+                except queue.Empty:
+                    # bounded poll: a producer that died *between* queue
+                    # puts (OOM-killed, uncaught BaseException path lost)
+                    # must surface as a recoverable fault, not a hang
+                    if not producer.is_alive():
+                        raise PipelineFault(
+                            "producer thread died without delivering "
+                            "end-of-epoch")
+                    continue
                 if isinstance(item, _EndOfEpoch):
                     if item.error is not None:
                         raise item.error
                     return
-                batch = item.result()
+                batch = self._result_healing(item)
                 with lock:
                     in_flight[0] -= 1
                     pending = in_flight[0]
@@ -228,24 +330,25 @@ class AsyncBatchingPipeline(BatchingPipeline):
                     idle += time.perf_counter() - t_yield
         finally:
             stop.set()
-            # drain queued futures so shutdown never deadlocks on
-            # cancelled-but-queued work
+            # drain queued work so shutdown never deadlocks on
+            # cancelled-but-queued tasks
             while True:
                 try:
                     item = out.get_nowait()
                 except queue.Empty:
                     break
-                if isinstance(item, Future):
-                    item.cancel()
+                if isinstance(item, _Pending):
+                    item.future.cancel()
             producer.join(timeout=10.0)
-            ex.shutdown(wait=True, cancel_futures=True)
+            # self._executor, not a local: healing may have replaced it
+            self._executor.shutdown(wait=True, cancel_futures=True)
 
     @staticmethod
     def _ready_depth(out: "queue.Queue[object]") -> int:
         """Finalized batches sitting ready ahead of the consumer."""
         with out.mutex:
-            return sum(1 for f in out.queue
-                       if isinstance(f, Future) and f.done())
+            return sum(1 for p in out.queue
+                       if isinstance(p, _Pending) and p.future.done())
 
 
 def make_pipeline(corpus: Corpus, cfg: W2VConfig,

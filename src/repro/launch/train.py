@@ -77,7 +77,22 @@ def run_w2v(args) -> int:
     if trainer.resumed_step is not None:
         print(f"resumed from checkpoint batch {trainer.resumed_step} "
               f"({trainer.state.words_seen:,} words seen)")
-    trainer.train(max_batches=args.max_batches)
+    resilient = (args.max_restarts > 0 or args.step_timeout > 0
+                 or args.health_every > 0)
+    if resilient:
+        trainer.train_resilient(
+            max_batches=args.max_batches,
+            max_restarts=args.max_restarts or 3,
+            step_timeout_s=args.step_timeout,
+            health_every=args.health_every,
+            reset_after=args.reset_after)
+        r = trainer.last_report
+        print(f"resilience: restarts={r.restarts} rollbacks={r.rollbacks} "
+              f"health_failures={r.health_failures} timeouts={r.timeouts} "
+              f"skipped={r.batches_skipped} "
+              f"recovery_seconds={r.recovery_seconds:.3f}")
+    else:
+        trainer.train(max_batches=args.max_batches)
     if args.ckpt_dir:
         print("checkpoint:", trainer.save_checkpoint())
     print(f"throughput: {trainer.words_per_sec:,.0f} words/sec "
@@ -177,6 +192,22 @@ def main() -> int:
     w.add_argument("--ckpt-every", type=int, default=0,
                    help="checkpoint every N batches (0: only at exit when "
                         "--ckpt-dir is set)")
+    # resilience (DESIGN.md §9): any nonzero flag below drives the run
+    # through TrainSupervisor (restore + bit-exact replay on failure)
+    w.add_argument("--max-restarts", type=int, default=0,
+                   help="supervised recovery: restore the latest good "
+                        "checkpoint and replay on step failure, up to N "
+                        "restarts per failure burst (0: supervision off "
+                        "unless another resilience flag is set)")
+    w.add_argument("--step-timeout", type=float, default=0.0,
+                   help="watchdog: a batch exceeding this many seconds is "
+                        "treated as a failed step (0: no timeout)")
+    w.add_argument("--health-every", type=int, default=0,
+                   help="probe the tables for NaN/divergence every N "
+                        "batches, rolling back on failure (0: no probe)")
+    w.add_argument("--reset-after", type=int, default=0,
+                   help="refill the restart budget after N consecutive "
+                        "good batches (0: budget is cumulative)")
     w.set_defaults(fn=run_w2v)
 
     l = sub.add_parser("lm")

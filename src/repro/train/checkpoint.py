@@ -1,10 +1,26 @@
 """Fault-tolerant checkpointing: atomic, sharded-aware, reshard-on-load.
 
 Layout (one directory per step):
-    <dir>/step_000100.tmp/...   (written first)
-    <dir>/step_000100/          (atomic rename when complete)
+    <dir>/step_000100.tmp.<unique>/   (written + fsynced first)
+    <dir>/step_000100/                (atomic rename when complete)
         manifest.json           (tree structure, shapes, dtypes, checksums)
         arrays.npz              (flattened leaves)
+
+Publication is crash-atomic (DESIGN.md §9): files and the tmp directory are
+fsynced before the rename, a same-step re-save displaces the old directory
+by *rename* (never rmtree-then-rename, which loses the newest checkpoint if
+the process dies between the two), and the parent directory is fsynced
+after publish. :func:`_clean_stale` — run at every save and consulted by
+:func:`latest_step` — deletes interrupted ``*.tmp.*`` writes and recovers a
+displaced ``*.old.*`` directory whose final name went missing mid-publish.
+
+Reads are defensive: a directory that cannot be read back (truncated
+``arrays.npz``, unparseable manifest, checksum mismatch) raises
+:class:`CorruptCheckpoint`; :func:`restore` with ``step=None`` and
+:func:`latest_step` *quarantine* such a directory (rename to
+``step_N.corrupt*``) and fall back to the previous step instead of killing
+the run. Structural mismatches (wrong shapes, missing leaves) still raise —
+those are caller errors, not disk faults.
 
 Restore works onto ANY mesh/sharding (elastic restarts): arrays are loaded
 host-side and re-placed with `jax.device_put` against the target shardings —
@@ -16,14 +32,26 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import logging
 import os
 import re
 import shutil
 import tempfile
+import zipfile
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+log = logging.getLogger("repro.checkpoint")
+
+
+class CorruptCheckpoint(IOError):
+    """A checkpoint directory that cannot be read back: truncated or
+    missing ``arrays.npz``, unparseable ``manifest.json``, or a checksum
+    mismatch. Latest-step restores quarantine the directory and fall back
+    to the previous step; explicit-step restores quarantine and re-raise."""
 
 
 @dataclasses.dataclass
@@ -71,15 +99,74 @@ def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
     return out
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directory entries need their own
+    fsync for the rename to be durable)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _clean_stale(ckpt_dir: str) -> None:
+    """Remove interrupted publishes; recover displaced finals.
+
+    ``step_N.tmp*`` directories are incomplete writes — deleted. A
+    ``step_N.old.*`` directory is a *complete* checkpoint displaced by a
+    re-save of the same step: if the crash hit the window between the two
+    renames (so ``step_N`` itself is missing), rename it back — the
+    checkpoint is not lost; otherwise delete it.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return
+    for name in sorted(os.listdir(ckpt_dir)):
+        if re.fullmatch(r"step_\d+\.tmp(\..*)?", name):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+            continue
+        m = re.fullmatch(r"(step_\d+)\.old\..*", name)
+        if m:
+            path = os.path.join(ckpt_dir, name)
+            final = os.path.join(ckpt_dir, m.group(1))
+            if (not os.path.exists(final)
+                    and os.path.exists(os.path.join(path, "manifest.json"))):
+                log.warning("recovering displaced checkpoint %s -> %s "
+                            "(crash during publish)", name, m.group(1))
+                os.rename(path, final)
+            else:
+                shutil.rmtree(path, ignore_errors=True)
+
+
+def quarantine(ckpt_dir: str, step: int) -> str:
+    """Move a corrupt/poisoned step directory out of the restore path
+    (renamed to ``step_N.corrupt*``, kept for post-mortem). Returns the
+    quarantine path."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    dst = d + ".corrupt"
+    n = 0
+    while os.path.exists(dst):
+        n += 1
+        dst = f"{d}.corrupt.{n}"
+    os.rename(d, dst)
+    log.warning("quarantined checkpoint step %d -> %s", step,
+                os.path.basename(dst))
+    return dst
+
+
 def save(ckpt_dir: str, step: int, tree: Any,
          extra: Optional[Dict] = None, keep: int = 3) -> str:
-    """Atomically write a checkpoint; prune to the newest `keep`."""
+    """Crash-atomically write a checkpoint; prune to the newest `keep`.
+
+    Write path: unique tmp dir -> fsync files + tmp dir -> displace any
+    existing final by rename -> rename tmp into place -> fsync parent ->
+    delete the displaced dir. A crash at any point leaves either the old
+    or the new checkpoint recoverable (``_clean_stale``).
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
+    _clean_stale(ckpt_dir)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+    tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp.", dir=ckpt_dir)
+    unique = tmp.rsplit(".", 1)[-1]
 
     leaves = _flatten_with_paths(tree)
     arrays = {}
@@ -93,12 +180,26 @@ def save(ckpt_dir: str, step: int, tree: Any,
             "dtype": str(arr.dtype),
             "sha1": hashlib.sha1(arr.tobytes()).hexdigest(),
         })
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(tmp)
+    displaced = None
     if os.path.exists(final):
-        shutil.rmtree(final)
+        # same-step re-save (e.g. trainer re-checkpointing at the same
+        # batches_seen after a rollback): displace by rename, never rmtree
+        # — the old checkpoint stays recoverable until the new one is live
+        displaced = f"{final}.old.{unique}"
+        os.rename(final, displaced)
     os.rename(tmp, final)
+    _fsync_path(ckpt_dir)
+    if displaced is not None:
+        shutil.rmtree(displaced, ignore_errors=True)
     _prune(ckpt_dir, keep)
     return final
 
@@ -123,8 +224,35 @@ def list_steps(ckpt_dir: str) -> List[int]:
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """The newest step whose directory passes a light completeness check
+    (parseable manifest + arrays file present). An incomplete/partial
+    directory is quarantined and the previous step returned instead; a
+    publish interrupted mid-rename is recovered first (``_clean_stale``)."""
+    _clean_stale(ckpt_dir)
     steps = list_steps(ckpt_dir)
-    return steps[-1] if steps else None
+    while steps:
+        step = steps.pop()
+        d = os.path.join(ckpt_dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                json.load(f)
+            ok = os.path.exists(os.path.join(d, "arrays.npz"))
+        except (OSError, ValueError):
+            ok = False
+        if ok:
+            return step
+        log.warning("checkpoint step %d is partial — quarantining and "
+                    "falling back", step)
+        quarantine(ckpt_dir, step)
+    return None
+
+
+def _read_manifest(d: str) -> Dict:
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        raise CorruptCheckpoint(f"unreadable manifest in {d}: {e}") from e
 
 
 def peek(ckpt_dir: str, step: Optional[int] = None
@@ -139,8 +267,7 @@ def peek(ckpt_dir: str, step: Optional[int] = None
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _read_manifest(d)
     leaves = {l["path"]: {"shape": tuple(l["shape"]), "dtype": l["dtype"]}
               for l in manifest["leaves"]}
     return leaves, manifest["extra"]
@@ -150,15 +277,44 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
             shardings: Any = None, verify: bool = True) -> Tuple[Any, Dict]:
     """Restore into the structure of `tree_like` (arrays or
     ShapeDtypeStructs). `shardings` (optional pytree) re-places leaves for
-    the current mesh — elastic resharding."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    the current mesh — elastic resharding.
+
+    With ``step=None`` a corrupt newest checkpoint is quarantined and the
+    previous one restored instead (repeating as needed); an explicit
+    ``step`` that turns out corrupt is quarantined and
+    :class:`CorruptCheckpoint` re-raised so the caller can pick the
+    fallback itself.
+    """
+    if step is not None:
+        try:
+            return _restore_step(ckpt_dir, step, tree_like, shardings,
+                                 verify)
+        except CorruptCheckpoint:
+            quarantine(ckpt_dir, step)
+            raise
+    steps = list_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    while steps:
+        s = steps.pop()
+        try:
+            return _restore_step(ckpt_dir, s, tree_like, shardings, verify)
+        except CorruptCheckpoint as e:
+            log.warning("checkpoint step %d corrupt (%s) — quarantining "
+                        "and falling back", s, e)
+            quarantine(ckpt_dir, s)
+    raise FileNotFoundError(
+        f"no readable checkpoints under {ckpt_dir} (all quarantined)")
+
+
+def _restore_step(ckpt_dir: str, step: int, tree_like: Any,
+                  shardings: Any, verify: bool) -> Tuple[Any, Dict]:
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "arrays.npz"))
+    manifest = _read_manifest(d)
+    try:
+        data = np.load(os.path.join(d, "arrays.npz"))
+    except (OSError, ValueError, zipfile.BadZipFile, EOFError) as e:
+        raise CorruptCheckpoint(f"unreadable arrays.npz in {d}: {e}") from e
     by_path = {l["path"]: l for l in manifest["leaves"]}
 
     want = _flatten_with_paths(tree_like)
@@ -170,9 +326,15 @@ def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None,
         meta = by_path.get(path)
         if meta is None:
             raise KeyError(f"checkpoint {d} missing leaf {path!r}")
-        arr = data[meta["key"]]
+        try:
+            # a truncated zip member surfaces here, not at np.load (lazy)
+            arr = data[meta["key"]]
+        except (KeyError, OSError, ValueError, zipfile.BadZipFile,
+                EOFError, zlib.error) as e:
+            raise CorruptCheckpoint(
+                f"unreadable leaf {path!r} in {d}: {e}") from e
         if verify and hashlib.sha1(arr.tobytes()).hexdigest() != meta["sha1"]:
-            raise IOError(f"checksum mismatch for {path!r} in {d}")
+            raise CorruptCheckpoint(f"checksum mismatch for {path!r} in {d}")
         if tuple(arr.shape) != tuple(like.shape):
             raise ValueError(
                 f"shape mismatch for {path!r}: ckpt {arr.shape} vs "

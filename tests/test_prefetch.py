@@ -214,6 +214,73 @@ def test_process_mode_matches_sync(subproc):
     assert "PROCESS_MODE_OK" in r.stdout
 
 
+def test_killed_process_worker_heals_bit_identical(subproc):
+    """SIGKILLing a process-pool worker breaks the whole pool
+    (BrokenProcessPool): the pipeline must rebuild it and recompute the
+    owed batches — the emitted stream stays bit-identical to sync
+    (DESIGN.md §9). Run in a subprocess with no jax imported so the pool
+    fork never races XLA threads."""
+    r = subproc("""
+        import os, signal
+        import numpy as np
+        from repro.configs.w2v import smoke
+        from repro.data.batching import BatchingPipeline
+        from repro.data.corpus import synthetic_zipf_corpus
+        from repro.data.prefetch import AsyncBatchingPipeline
+
+        cfg = smoke(sentences_per_batch=32, max_sentence_len=32)
+        corpus = synthetic_zipf_corpus(vocab_size=200, n_sentences=200,
+                                       mean_len=12, seed=0)
+        sync = BatchingPipeline(corpus, cfg)
+        ref = list(sync.batches(pad_len=32, epoch=0))
+        assert len(ref) >= 4
+
+        apipe = AsyncBatchingPipeline(corpus, cfg, vocab=sync.vocab,
+                                      workers=2, depth=2, mode="process")
+        got = []
+        for i, b in enumerate(apipe.batches(pad_len=32, epoch=0)):
+            got.append(b)
+            if i == 0:
+                pids = apipe.worker_pids()
+                assert pids, "process pool has no live workers"
+                os.kill(pids[0], signal.SIGKILL)
+        assert apipe.prefetch.heals >= 1, "pool was never healed"
+        assert len(got) == len(ref)
+        for a, b in zip(ref, got):
+            assert np.array_equal(a.tokens, b.tokens)
+            assert np.array_equal(a.negs, b.negs)
+            assert np.array_equal(a.lengths, b.lengths)
+        print("HEAL_OK heals=%d" % apipe.prefetch.heals)
+    """)
+    assert r.returncode == 0, r.stderr
+    assert "HEAL_OK" in r.stdout
+
+
+def test_dead_producer_surfaces_as_pipeline_fault(monkeypatch):
+    """A producer thread that dies without delivering its end-of-epoch
+    sentinel must surface as a recoverable PipelineFault within the
+    consumer's bounded poll — never a hang."""
+    import queue as queue_mod
+
+    import repro.data.prefetch as prefetch_mod
+
+    class SentinelEatingQueue(queue_mod.Queue):
+        # drop the end-of-epoch marker: exactly what the consumer sees
+        # when the producer is killed between queue puts
+        def put(self, item, *a, **kw):
+            if isinstance(item, prefetch_mod._EndOfEpoch):
+                return
+            super().put(item, *a, **kw)
+
+    monkeypatch.setattr(prefetch_mod.queue, "Queue", SentinelEatingQueue)
+    cfg = _cfg()
+    apipe = AsyncBatchingPipeline(_corpus(), cfg, workers=2, depth=2)
+    with pytest.raises(prefetch_mod.PipelineFault, match="producer"):
+        list(apipe.batches(pad_len=32, epoch=0))
+    apipe._producer.join(timeout=5.0)
+    assert not apipe._producer.is_alive()
+
+
 def test_pipeline_cursor_roundtrip():
     from repro.train.checkpoint import PipelineCursor
 

@@ -1,0 +1,319 @@
+"""Recovery exactness (DESIGN.md §9): supervised runs that survive
+injected step failures, NaN'd tables, truncated/partial checkpoints, and
+poison batches must end **bit-identical** to a fault-free run — plus unit
+coverage for the resilience primitives the supervisor is built from
+(RetryPolicy.reset_after, Watchdog exception chaining, StragglerMonitor
+decay/eviction, crash-atomic checkpoint recovery)."""
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.w2v import smoke
+from repro.core.trainer import TrainSession
+from repro.data.batching import BatchingPipeline
+from repro.data.corpus import synthetic_cluster_corpus
+from repro.train import checkpoint as ckpt
+from repro.train.resilience import (FailureInjector, RetryPolicy,
+                                    StepTimeout, StragglerMonitor, Watchdog,
+                                    run_with_recovery)
+
+
+def _digest(state) -> str:
+    h = hashlib.sha1()
+    h.update(np.asarray(state.w_in).tobytes())
+    h.update(np.asarray(state.w_out).tobytes())
+    return h.hexdigest()
+
+
+@pytest.fixture(scope="module")
+def workload():
+    """Tiny 2-epoch workload (5 batches/epoch) + its fault-free digest."""
+    cfg = smoke(epochs=2, dim=32, sentences_per_batch=64)
+    corpus = synthetic_cluster_corpus(n_clusters=4, words_per_cluster=8,
+                                      n_sentences=300, mean_len=10, seed=0)
+    vocab = BatchingPipeline(corpus, cfg).vocab
+    base = TrainSession(BatchingPipeline(corpus, cfg, vocab=vocab), cfg,
+                        backend="jnp")
+    base.train()
+    return cfg, corpus, vocab, _digest(base.state), base.state.batches_seen
+
+
+def _session(workload, tmp_path, **kw):
+    cfg, corpus, vocab, _, _ = workload
+    kw.setdefault("ckpt_every", 2)
+    return TrainSession(BatchingPipeline(corpus, cfg, vocab=vocab), cfg,
+                        backend="jnp", ckpt_dir=str(tmp_path / "ckpt"),
+                        **kw)
+
+
+# ------------------------------------------------------- supervised recovery
+def test_injected_failures_recover_bit_exact(workload, tmp_path):
+    """Step exceptions mid-epoch AND across the epoch boundary: restore +
+    keyed-randomness replay reproduces the fault-free run bit for bit."""
+    cfg, corpus, vocab, base_digest, n = workload
+    inj = FailureInjector([3, 7])  # batch 3: mid-epoch-0; 7: mid-epoch-1
+    sess = _session(workload, tmp_path,
+                    on_metrics=lambda m: inj.check(m.batches_seen))
+    sess.train_resilient(backoff_s=0.0)
+    assert sess.state.batches_seen == n
+    assert _digest(sess.state) == base_digest
+    r = sess.last_report
+    assert r.restarts == 2 and r.rollbacks == 2
+    assert r.recovery_seconds > 0
+
+
+def test_nan_health_rollback_bit_exact(workload, tmp_path):
+    """Injected table NaN: the health probe catches it, rollback restores
+    the last clean checkpoint, and the replay is bit-exact."""
+    import jax.numpy as jnp
+
+    cfg, corpus, vocab, base_digest, n = workload
+    fired = []
+
+    def poison(state):
+        if state.batches_seen == 5 and not fired:
+            fired.append(True)
+            state.w_in = state.w_in.at[0, 0].set(jnp.nan)
+
+    sess = _session(workload, tmp_path, on_batch=poison)
+    sess.train_resilient(health_every=1, backoff_s=0.0)
+    assert _digest(sess.state) == base_digest
+    assert sess.last_report.health_failures == 1
+    assert sess.last_report.rollbacks >= 1
+
+
+def test_poisoned_checkpoint_is_quarantined(workload, tmp_path):
+    """A checkpoint written AFTER corruption landed (coarse health probe)
+    fails the post-restore probe: the supervisor quarantines it and falls
+    back to the older clean one — still ending bit-exact."""
+    import jax.numpy as jnp
+
+    cfg, corpus, vocab, base_digest, n = workload
+    fired = []
+
+    def poison(state):
+        # batch 3: no checkpoint due, and health_every=2 probes only at
+        # even batches — so ckpt@4 is saved from already-NaN tables
+        if state.batches_seen == 3 and not fired:
+            fired.append(True)
+            state.w_in = state.w_in.at[0, 0].set(jnp.nan)
+
+    sess = _session(workload, tmp_path, on_batch=poison)
+    sess.train_resilient(health_every=2, backoff_s=0.0)
+    assert _digest(sess.state) == base_digest
+    assert sess.last_report.ckpt_quarantined >= 1
+
+
+def test_poison_skip_equals_never_training_that_batch(workload, tmp_path):
+    """skip_poison: a batch that corrupts the tables every time it is
+    trained gets excised on replay — counted, counters advanced, and the
+    result is bit-identical to a run that never trained it at all."""
+    import jax.numpy as jnp
+
+    cfg, corpus, vocab, base_digest, n = workload
+    sess = _session(workload, tmp_path)
+
+    def poison(m):
+        # a "truly poison" batch: corrupts whenever TRAINED (not skipped)
+        if m.batches_seen == 5 and not m.skipped:
+            s = sess.state
+            s.w_in = s.w_in.at[0, 0].set(jnp.nan)
+
+    sess.on_metrics = poison
+    sess.train_resilient(health_every=1, skip_poison=True, backoff_s=0.0)
+    r = sess.last_report
+    assert r.health_failures == 1 and r.batches_skipped == 1
+    assert sess.state.batches_seen == n     # counters advanced through skip
+    assert _digest(sess.state) != base_digest  # one update excised
+    skipped_key = next(iter(sess.poison_skip))
+
+    # reference: same workload with that batch excised from the start
+    ref = TrainSession(BatchingPipeline(corpus, cfg, vocab=vocab), cfg,
+                       backend="jnp")
+    ref.poison_skip.add(skipped_key)
+    ref.train()
+    assert _digest(sess.state) == _digest(ref.state)
+
+
+def test_skip_poison_requires_unit_health_probe(workload, tmp_path):
+    sess = _session(workload, tmp_path)
+    with pytest.raises(ValueError, match="health_every=1"):
+        sess.train_resilient(skip_poison=True, health_every=2)
+
+
+def test_restore_latest_reinit_without_checkpoint(workload, tmp_path):
+    """With no usable checkpoint the rollback restarts from the seed —
+    and that replay-from-scratch is still bit-exact."""
+    cfg, corpus, vocab, base_digest, n = workload
+    sess = _session(workload, tmp_path, ckpt_every=0)  # never checkpoints
+    sess.train(max_batches=4)
+    assert sess.restore_latest() is None
+    assert sess.state.batches_seen == 0
+    sess.train()
+    assert _digest(sess.state) == base_digest
+
+
+# ------------------------------------------------- checkpoint crash-atomics
+def _save_two(d, step_a=2, step_b=4):
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    ckpt.save(d, step_a, tree, extra={"mark": step_a})
+    tree2 = {"w": np.arange(8, dtype=np.float32) * 2}
+    ckpt.save(d, step_b, tree2, extra={"mark": step_b})
+    return tree, tree2
+
+
+def test_truncated_arrays_falls_back_and_quarantines(tmp_path):
+    d = str(tmp_path / "ck")
+    tree, _ = _save_two(d)
+    path = os.path.join(d, "step_00000004", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    like = {"w": np.zeros(8, dtype=np.float32)}
+    got, extra = ckpt.restore(d, like, step=None)
+    assert extra["mark"] == 2
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    assert any(".corrupt" in n for n in os.listdir(d))
+    # the quarantined dir is out of the restore path for good
+    assert ckpt.latest_step(d) == 2
+
+
+def test_explicit_step_restore_of_corrupt_raises_after_quarantine(tmp_path):
+    d = str(tmp_path / "ck")
+    _save_two(d)
+    path = os.path.join(d, "step_00000004", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.truncate(10)
+    like = {"w": np.zeros(8, dtype=np.float32)}
+    with pytest.raises(ckpt.CorruptCheckpoint):
+        ckpt.restore(d, like, step=4)
+    assert any(n.startswith("step_00000004.corrupt")
+               for n in os.listdir(d))
+
+
+def test_partial_dir_latest_step_quarantines(tmp_path):
+    d = str(tmp_path / "ck")
+    _save_two(d)
+    os.remove(os.path.join(d, "step_00000004", "arrays.npz"))
+    assert ckpt.latest_step(d) == 2
+    assert any(".corrupt" in n for n in os.listdir(d))
+
+
+def test_clean_stale_recovers_displaced_checkpoint(tmp_path):
+    """A crash between displace-rename and publish-rename must not lose
+    the checkpoint: the displaced .old dir is renamed back."""
+    d = str(tmp_path / "ck")
+    _save_two(d)
+    final = os.path.join(d, "step_00000004")
+    os.rename(final, final + ".old.deadbeef")   # simulate the crash window
+    assert ckpt.latest_step(d) == 4             # recovered, not lost
+    like = {"w": np.zeros(8, dtype=np.float32)}
+    _, extra = ckpt.restore(d, like, step=4)
+    assert extra["mark"] == 4
+
+
+def test_stale_tmp_dirs_cleaned_on_save(tmp_path):
+    d = str(tmp_path / "ck")
+    _save_two(d)
+    stale = os.path.join(d, "step_00000006.tmp.abc123")
+    os.makedirs(stale)
+    ckpt.save(d, 8, {"w": np.zeros(3, dtype=np.float32)})
+    assert not os.path.exists(stale)
+    assert not [n for n in os.listdir(d) if ".tmp" in n]
+
+
+def test_checksum_corruption_detected(tmp_path):
+    """Flipped bytes with intact zip structure: the sha1 verify catches it
+    and the fallback still lands on the older step."""
+    d = str(tmp_path / "ck")
+    tree, _ = _save_two(d)
+    man_path = os.path.join(d, "step_00000004", "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    man["leaves"][0]["sha1"] = "0" * 40
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    like = {"w": np.zeros(8, dtype=np.float32)}
+    got, extra = ckpt.restore(d, like, step=None)
+    assert extra["mark"] == 2
+
+
+# --------------------------------------------------- resilience primitives
+def test_retry_budget_refills_after_sustained_progress():
+    inj = FailureInjector([1, 5, 9, 13])
+    calls = []
+
+    def step(i):
+        calls.append(i)
+        inj.check(i)
+
+    # 4 sparse failures vs a budget of 2: only survivable with refill
+    final = run_with_recovery(
+        step, start_step=0, end_step=16, on_failure=lambda s, e: s,
+        policy=RetryPolicy(max_restarts=2, backoff_s=0.0, reset_after=3))
+    assert final == 16
+
+    inj2 = FailureInjector([1, 5, 9, 13])
+    with pytest.raises(RuntimeError, match="injected failure"):
+        run_with_recovery(
+            lambda i: inj2.check(i), start_step=0, end_step=16,
+            on_failure=lambda s, e: s,
+            policy=RetryPolicy(max_restarts=2, backoff_s=0.0))
+
+
+def test_run_with_recovery_should_stop_mode():
+    seen = []
+    final = run_with_recovery(
+        seen.append, start_step=0, on_failure=lambda s, e: s,
+        should_stop=lambda: len(seen) >= 5)
+    assert final == 5 and seen == [0, 1, 2, 3, 4]
+    with pytest.raises(ValueError, match="end_step or should_stop"):
+        run_with_recovery(lambda i: None, start_step=0,
+                          on_failure=lambda s, e: s)
+
+
+def test_watchdog_timeout_not_swallowed_by_step_exception():
+    """A step that both overruns the watchdog AND raises must surface the
+    timeout chained from the step's exception — neither fact is lost."""
+    with pytest.raises(StepTimeout) as ei:
+        with Watchdog(0.01):
+            time.sleep(0.1)
+            raise ValueError("step also failed")
+    assert isinstance(ei.value.__cause__, ValueError)
+
+    # non-Exception escapes win over the timeout and propagate unchanged
+    with pytest.raises(KeyboardInterrupt):
+        with Watchdog(0.01):
+            time.sleep(0.1)
+            raise KeyboardInterrupt()
+
+
+def test_straggler_ema_seeds_then_decays():
+    m = StragglerMonitor(decay=0.9)
+    m.report("h", 2.0)
+    assert m.times["h"] == 2.0          # first report seeds
+    m.report("h", 1.0)
+    assert m.times["h"] == pytest.approx(0.9 * 2.0 + 0.1 * 1.0)
+
+
+def test_straggler_window_evicts_departed_hosts():
+    m = StragglerMonitor(decay=0.5, threshold=1.4, window=6)
+    m.report("gone", 9.0)
+    for _ in range(4):
+        for h in ("h0", "h1", "h2"):
+            m.report(h, 1.0)
+    assert "gone" not in m.times        # departed host no longer drags
+    assert m.stragglers() == []
+
+
+# ------------------------------------------------------------ chaos engine
+def test_chaos_smoke_schedule_bit_exact():
+    from repro.train.chaos import SCHEDULES, run_chaos
+
+    r = run_chaos(SCHEDULES["smoke"])
+    assert r["digest_match"] == 1
+    assert r["restarts"] == 1
+    assert r["faults_fired"] == r["faults_scheduled"] == 1

@@ -133,7 +133,7 @@ def test_watchdog_passes_fast_step():
 
 
 def test_straggler_monitor():
-    m = StragglerMonitor(ema=0.5, threshold=1.4)
+    m = StragglerMonitor(decay=0.5, threshold=1.4)
     for _ in range(10):
         for h in ["h0", "h1", "h2", "h3"]:
             m.report(h, 1.0)
