@@ -1,0 +1,141 @@
+"""Serving load harness (DESIGN.md §10): QPS / latency / swap / chaos.
+
+Rows:
+
+  * ``serve/b{B}``  — the batcher + jitted sharded top-k driven at
+    saturation with request batches of B queries: ``qps`` plus per-batch
+    ``p50_us``/``p99_us`` latency. The QPS-vs-batch-size curve is the
+    serving analogue of the training kernel's words/sec-vs-tile curve:
+    bigger batches amortize the table sweep until the device saturates.
+  * ``serve/swap``  — hot-swap cost: publish a fresh checkpoint and
+    measure stage+flip latency (``swap_ms``); queries keep flowing the
+    whole time (``served_during_swap``).
+  * ``serve/chaos`` — the deterministic serve chaos schedule
+    (:mod:`repro.serve.chaos`): watcher killed and restarted mid-swap.
+    ``dropped`` and ``torn`` must be 0 — gated strictly by
+    ``benchmarks/compare.py`` like ``digest_match``.
+
+``compare.py`` gates ``qps`` (>20% drop vs baseline fails, same bar as
+training words/sec) and ``p99_us`` growth.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+BATCH_SIZES = (1, 8, 32)
+VOCAB, HOT, DIM = 4096, 512, 64
+REQUESTS = 48
+K = 5
+
+
+def _mk_index(step=0):
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.distributed.vocab_placement import VocabPlacement
+    from repro.serve.index import EmbeddingIndex
+
+    rng = np.random.default_rng(7)
+    table = rng.standard_normal((VOCAB, DIM)).astype(np.float32)
+    placement = VocabPlacement(vocab_size=VOCAB, hot=HOT, n_shards=1)
+    hot, cold = placement.split(table)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    return EmbeddingIndex._stage(placement, hot, cold, mesh, step=step)
+
+
+def _drive(index, batch_size, requests=REQUESTS, window=4):
+    """Closed-loop load: keep `window` full-size request batches in
+    flight (enough to saturate, not enough to bury latency under queue
+    backlog); returns (qps, p50_us, p99_us, batches)."""
+    from repro.serve.server import EmbeddingServer
+
+    rng = np.random.default_rng(11)
+    with EmbeddingServer(index, batch_size=batch_size, deadline_ms=0.5,
+                         k=K) as server:
+        # one warmup round to take jit compilation off the clock
+        server.neighbors(rng.integers(VOCAB, size=batch_size)
+                         .astype(np.int32))
+        server.latencies_us.clear()
+        pending = []
+        t0 = time.perf_counter()
+        for i in range(requests):
+            if i >= window:
+                pending[i - window].wait(60.0)
+            ids = rng.integers(VOCAB, size=batch_size).astype(np.int32)
+            pending.append(server.submit("nn", ids))
+        for req in pending[-window:]:
+            req.wait(60.0)
+        wall = time.perf_counter() - t0
+        lat = np.asarray(server.latencies_us, np.float64)
+        return (requests * batch_size / max(wall, 1e-9),
+                float(np.percentile(lat, 50)),
+                float(np.percentile(lat, 99)), server.batches)
+
+
+def _swap_row():
+    """Publish a checkpoint stream and time one staged hot-swap while a
+    query load keeps running against the server."""
+    import shutil
+    import tempfile
+
+    from repro.distributed.vocab_placement import VocabPlacement
+    from repro.serve.chaos import _publish
+    from repro.serve.server import EmbeddingServer
+    from repro.serve.snapshot import SnapshotWatcher
+
+    rng = np.random.default_rng(3)
+    placement = VocabPlacement(vocab_size=VOCAB, hot=HOT, n_shards=1)
+    tmp = tempfile.mkdtemp(prefix="bench_serve_")
+    try:
+        table = rng.standard_normal((VOCAB, DIM)).astype(np.float32)
+        _publish(tmp, 10, table, placement)
+        watcher = SnapshotWatcher(tmp, poll_s=0.01)
+        watcher.wait_ready()
+        with EmbeddingServer(watcher, batch_size=8, deadline_ms=0.5,
+                             k=K) as server:
+            served_before = 0
+            pending = []
+            for _ in range(16):
+                ids = rng.integers(VOCAB, size=8).astype(np.int32)
+                pending.append(server.submit("nn", ids))
+            served_before = server.served
+            table2 = rng.standard_normal((VOCAB, DIM)).astype(np.float32)
+            _publish(tmp, 20, table2, placement)
+            t0 = time.perf_counter()
+            swapped = watcher.poll_once()      # stage + flip, timed
+            swap_ms = (time.perf_counter() - t0) * 1e3
+            assert swapped and watcher.current().step == 20
+            for req in pending:
+                req.wait(60.0)
+            return {"swap_ms": swap_ms,
+                    "served_during_swap": server.served - served_before,
+                    "load_failures": watcher.load_failures}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run():
+    from repro.serve.chaos import SCHEDULES, run_serve_chaos
+
+    for b in BATCH_SIZES:
+        index = _mk_index()
+        qps, p50, p99, batches = _drive(index, b)
+        us = 1e6 * b / max(qps, 1e-9)
+        yield (f"serve/b{b},{us:.1f},qps={qps:.0f} p50_us={p50:.0f} "
+               f"p99_us={p99:.0f} batches={batches} k={K} vocab={VOCAB} "
+               f"dim={DIM}")
+
+    s = _swap_row()
+    yield (f"serve/swap,{s['swap_ms'] * 1e3:.1f},"
+           f"swap_ms={s['swap_ms']:.1f} "
+           f"served_during_swap={s['served_during_swap']} "
+           f"load_failures={s['load_failures']}")
+
+    c = run_serve_chaos(SCHEDULES["ci"])
+    yield (f"serve/chaos,{c['wall_seconds'] * 1e6:.1f},"
+           f"dropped={c['dropped']} torn={c['torn']} swaps={c['swaps']} "
+           f"crashes={c['crashes']} queries={c['queries']} "
+           f"publishes={c['publishes']} load_failures={c['load_failures']} "
+           f"wall_seconds={c['wall_seconds']}")

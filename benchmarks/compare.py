@@ -10,6 +10,11 @@ Two classes of check, mirroring the repo's standing gates:
     existing 1% gate (``--quality-delta``) for T <= ``--quality-max-tile``,
     checked on the *current* run alone, so a quality break fails even on
     the bootstrap run that has no baseline yet.
+  * **serving** — any row carrying ``qps`` (the bench_serve batch-size
+    sweep) must not regress by more than ``--max-regression`` vs
+    baseline (same bar as training throughput), with ``p99_us`` growth
+    bounded by ``--max-p99-growth``; the serve chaos row's ``dropped``
+    and ``torn`` counters must be 0 on the *current* run alone.
   * **exchange traffic** — any row carrying ``exchange_bytes`` (the
     request-exact per-device bytes from bench_memory's vocab-shard table)
     must not grow by more than ``--max-exchange-growth`` vs baseline; and
@@ -153,6 +158,56 @@ def check_resilience(baseline: Dict[str, dict], current: Dict[str, dict],
     return failures
 
 
+def check_serving(baseline: Dict[str, dict], current: Dict[str, dict],
+                  max_regression: float, max_p99_growth: float
+                  ) -> List[str]:
+    failures = []
+    for name, cur in sorted(current.items()):
+        # strict current-run invariants: the serve chaos row must report
+        # zero dropped and zero torn queries (like digest_match)
+        dropped, torn = cur.get("dropped"), cur.get("torn")
+        if isinstance(dropped, (int, float)) or isinstance(
+                torn, (int, float)):
+            bad = (dropped or 0) or (torn or 0)
+            print(f"  [{'REGRESSED' if bad else 'ok'}] {name}: "
+                  f"dropped={dropped:.0f} torn={torn:.0f}")
+            if bad:
+                failures.append(
+                    f"{name}: serve chaos dropped={dropped:.0f} "
+                    f"torn={torn:.0f} (both must be 0)")
+            continue
+        qps = cur.get("qps")
+        if not isinstance(qps, (int, float)):
+            continue
+        base = baseline.get(name, {})
+        base_qps = base.get("qps")
+        if not isinstance(base_qps, (int, float)) or base_qps <= 0:
+            print(f"  [new] {name}: qps={qps:.0f} (no baseline)")
+            continue
+        ratio = qps / base_qps
+        ok = ratio >= 1.0 - max_regression
+        print(f"  [{'ok' if ok else 'REGRESSED'}] {name}: "
+              f"{base_qps:.0f} -> {qps:.0f} qps ({(ratio - 1) * 100:+.1f}%)")
+        if not ok:
+            failures.append(
+                f"{name}: qps fell {(1 - ratio) * 100:.1f}% "
+                f"(> {max_regression * 100:.0f}% allowed)")
+            continue
+        p99, base_p99 = cur.get("p99_us"), base.get("p99_us")
+        if (isinstance(p99, (int, float))
+                and isinstance(base_p99, (int, float)) and base_p99 > 0):
+            ratio = p99 / base_p99
+            ok = ratio <= 1.0 + max_p99_growth
+            print(f"  [{'ok' if ok else 'REGRESSED'}] {name}: "
+                  f"p99 {base_p99:.0f} -> {p99:.0f} us "
+                  f"({(ratio - 1) * 100:+.0f}%)")
+            if not ok:
+                failures.append(
+                    f"{name}: p99_us grew {(ratio - 1) * 100:.0f}% "
+                    f"(> {max_p99_growth * 100:.0f}% allowed)")
+    return failures
+
+
 def check_quality(current: Dict[str, dict], quality_delta: float,
                   max_tile: int) -> List[str]:
     failures = []
@@ -191,6 +246,11 @@ def main() -> int:
                     help="allowed fractional exchange_bytes growth vs "
                          "baseline (0.20=20%%); the exact<=dense invariant "
                          "is checked regardless")
+    ap.add_argument("--max-p99-growth", type=float, default=1.0,
+                    help="allowed fractional serve p99_us growth vs "
+                         "baseline (1.0=100%%; tail latency is wall-clock "
+                         "noisy on shared CI runners); qps is gated at "
+                         "--max-regression and dropped/torn strictly")
     ap.add_argument("--max-recovery-growth", type=float, default=1.0,
                     help="allowed fractional recovery_seconds growth vs "
                          "baseline (1.0=100%%; recovery time is wall-clock "
@@ -227,6 +287,9 @@ def main() -> int:
     print("perf-gate: resilience (chaos recovery, bit-exact + bounded)")
     failures += check_resilience(baseline, current,
                                  args.max_recovery_growth)
+    print("perf-gate: serving (qps/p99 vs baseline, chaos dropped/torn)")
+    failures += check_serving(baseline, current, args.max_regression,
+                              args.max_p99_growth)
 
     if failures:
         print("\nperf-gate FAILED:", file=sys.stderr)

@@ -9,6 +9,7 @@
   bench_lm_step     — (this repo) per-arch reduced-config step timings
   bench_tile_sweep  — (this repo) DESIGN.md §4 window-tile sweep
   bench_resilience  — (this repo) DESIGN.md §9 chaos-schedule recovery
+  bench_serve       — (this repo) DESIGN.md §10 serving QPS/p50/p99 + swap
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only <name>] [--out FILE]
 
@@ -58,7 +59,7 @@ def _parse_derived(derived: str) -> dict:
 # suite name -> module benchmarks.bench_<name>; single registry that both
 # --only's choices and the run loop derive from
 SUITE_NAMES = ("roofline", "memory", "batching", "throughput", "quality",
-               "tile_sweep", "lm_step", "resilience")
+               "tile_sweep", "lm_step", "resilience", "serve")
 
 
 def _load_suites() -> dict:

@@ -625,11 +625,28 @@ class TrainSession:
     # -- inference helpers ----------------------------------------------------
     def embeddings(self) -> np.ndarray:
         """The input embedding table ``(V, d)``; vocab-sharded sessions
-        reassemble it from the hot replica + cold shards."""
+        reassemble it from the hot replica + cold shards. NOTE: for a
+        sharded session this gathers the full table onto one host —
+        fine for examples and tests, wrong for serving; the serve path
+        uses :meth:`embeddings_sharded` instead."""
         if self.placement is not None:
             return self.placement.merge(np.asarray(self.state.w_in),
                                         np.asarray(self.state.cold_in))
         return np.asarray(self.state.w_in)
+
+    def embeddings_sharded(self):
+        """Shard-aware view of the input table — no ``(V, d)`` gather.
+
+        Returns ``(hot, cold, placement)``: for a vocab-sharded session,
+        the replicated hot head ``(hot, d)``, the shard-major cold table
+        ``(cold_pad, d)`` (still device-resident with its training
+        sharding), and the :class:`VocabPlacement` describing the
+        layout. For a replicated session, ``(w_in, None, None)`` — the
+        caller chooses its own serving split
+        (:meth:`repro.serve.index.EmbeddingIndex.from_session`)."""
+        if self.placement is not None:
+            return self.state.w_in, self.state.cold_in, self.placement
+        return self.state.w_in, None, None
 
     def nearest(self, word_id: int, k: int = 5) -> np.ndarray:
         e = self.embeddings()

@@ -1,0 +1,32 @@
+"""Embedding query serving (DESIGN.md §10).
+
+The serving leg of the reproduction: trained tables leave
+``TrainSession`` through the PR 5 split-checkpoint format and are served
+as batched nearest-neighbour / analogy top-k directly over the *sharded*
+layout — per-shard partial top-k plus a cross-shard merge, never
+reassembling the ``(V, d)`` table on one host. FULL-W2V's reuse
+hierarchy applies unchanged: the normalized tables stay resident in
+device memory and every query batch amortizes the HBM sweep over B
+queries, exactly like the training kernel amortizes it over a window
+tile.
+
+Modules:
+
+* :mod:`repro.serve.index`    — :class:`EmbeddingIndex`: checkpoint →
+  per-shard pre-normalized device buffers.
+* :mod:`repro.serve.query`    — jitted sharded top-k (+ the dense
+  single-host jnp oracle the parity tests compare against).
+* :mod:`repro.serve.snapshot` — :class:`SnapshotWatcher`: hot-swap from
+  an in-progress training run's checkpoint stream.
+* :mod:`repro.serve.server`   — :class:`EmbeddingServer`: deadline/
+  max-batch request coalescing in front of the jitted path.
+* :mod:`repro.serve.chaos`    — deterministic serve-side chaos harness
+  (watcher kill/restart mid-swap; no dropped or torn queries).
+"""
+from repro.serve.index import EmbeddingIndex
+from repro.serve.query import dense_topk, make_topk_fn
+from repro.serve.server import EmbeddingServer
+from repro.serve.snapshot import SnapshotWatcher
+
+__all__ = ["EmbeddingIndex", "EmbeddingServer", "SnapshotWatcher",
+           "dense_topk", "make_topk_fn"]

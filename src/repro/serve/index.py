@@ -1,0 +1,186 @@
+"""Serving-side embedding index: checkpoint bytes → per-shard device buffers.
+
+:class:`EmbeddingIndex` is the read-only counterpart of the trainer's
+split table state (DESIGN.md §8): the replicated Zipf-hot head plus the
+striped cold tail, pre-normalized row-wise on device so every query is a
+pure dot-product scan. Loading goes through ``checkpoint.peek`` +
+``checkpoint.restore`` and touches **only the input table** (``hot_in``/
+``cold_in`` — never the output table, never a merged ``(V, d)``
+reassembly): a split checkpoint restores leaf-by-leaf into the serving
+layout, re-striping the cold table host-side when the serving shard
+count differs from the writing run's (a permutation of the cold rows,
+O(cold·d) — the full-table merge path is deliberately never taken).
+
+Every index carries a placement — a 1-shard placement when serving on
+one device — so the query path (:mod:`repro.serve.query`) is always the
+sharded code, exactly like the trainer's vocab-sharded step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed.vocab_placement import VocabPlacement
+
+log = logging.getLogger("repro.serve.index")
+
+# Hot-head fraction used when a *replicated* checkpoint (no recorded
+# placement) is split for serving: the vocabulary is frequency-sorted by
+# construction, so a prefix head is still the Zipf-hot set even without
+# the original corpus counts.
+SERVE_HOT_FRAC = 0.1
+
+
+def _normalize(rows: jax.Array) -> jax.Array:
+    """L2-normalize rows (zero/padding rows stay zero)."""
+    norm = jnp.linalg.norm(rows, axis=-1, keepdims=True)
+    return rows / jnp.maximum(norm, 1e-12)
+
+
+def _restripe(cold: np.ndarray, src: VocabPlacement,
+              dst: VocabPlacement) -> np.ndarray:
+    """Permute a shard-major cold table from ``src``'s stripe layout to
+    ``dst``'s — the elastic-serving path (train on N shards, serve on M)
+    without reassembling the full table."""
+    out = np.zeros((dst.cold_pad,) + cold.shape[1:], cold.dtype)
+    out[dst._perm()[:dst.cold]] = cold[src._perm()[:src.cold]]
+    return out
+
+
+@dataclasses.dataclass
+class EmbeddingIndex:
+    """Pre-normalized, shard-resident input-embedding table + its layout.
+
+    ``hot`` is the replicated normalized head ``(hot, d)``; ``cold`` the
+    shard-major normalized cold table ``(cold_pad, d)`` (rows over the
+    mesh ``data`` axis when a real mesh is attached). ``step`` records
+    which checkpoint step the index was built from — the snapshot
+    identity the hot-swap protocol flips on.
+    """
+
+    placement: VocabPlacement
+    hot: jax.Array                  # (hot, d) f32, rows L2-normalized
+    cold: jax.Array                 # (cold_pad, d) f32, rows L2-normalized
+    mesh: Mesh
+    step: Optional[int] = None
+    extra: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def vocab_size(self) -> int:
+        """V — real vocabulary rows served."""
+        return self.placement.vocab_size
+
+    @property
+    def dim(self) -> int:
+        """d — embedding width."""
+        return int(self.hot.shape[1])
+
+    @property
+    def n_shards(self) -> int:
+        """Serving shard count (the mesh ``data`` axis)."""
+        return self.placement.n_shards
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def load(cls, ckpt_dir: str, step: Optional[int] = None,
+             mesh: Optional[Mesh] = None,
+             hot_frac: float = SERVE_HOT_FRAC) -> "EmbeddingIndex":
+        """Build an index from a checkpoint directory.
+
+        ``peek`` decides the format: a split-table checkpoint restores
+        ``hot_in``/``cold_in`` directly (re-striped if the serving shard
+        count differs from the writing run's); a replicated checkpoint
+        restores ``w_in`` and splits it under a prefix-head placement
+        (``hot_frac``). Raises ``FileNotFoundError`` with no usable
+        checkpoint and ``CorruptCheckpoint``/``KeyError`` per the
+        checkpoint layer's contract — the snapshot watcher catches these
+        and keeps serving the previous snapshot.
+        """
+        from repro.train import checkpoint as ckpt
+
+        if step is None:
+            step = ckpt.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+        leaves, extra = ckpt.peek(ckpt_dir, step=step)
+        mesh = mesh or Mesh(np.array(jax.devices()[:1]), ("data",))
+        n_serve = int(mesh.shape["data"])
+
+        def like(name):
+            meta = leaves[name]
+            return jax.ShapeDtypeStruct(meta["shape"], np.dtype(meta["dtype"]))
+
+        if "hot_in" in leaves:
+            src = VocabPlacement.from_extra(extra["vocab_shard"])
+            tree, _ = ckpt.restore(
+                ckpt_dir, {"hot_in": like("hot_in"), "cold_in": like("cold_in")},
+                step=step)
+            hot = np.asarray(tree["hot_in"], np.float32)
+            cold = np.asarray(tree["cold_in"], np.float32)
+            placement = src
+            if n_serve != src.n_shards:
+                placement = VocabPlacement(vocab_size=src.vocab_size,
+                                           hot=src.hot, n_shards=n_serve)
+                cold = _restripe(cold, src, placement)
+        else:
+            tree, _ = ckpt.restore(ckpt_dir, {"w_in": like("w_in")}, step=step)
+            full = np.asarray(tree["w_in"], np.float32)
+            v = full.shape[0]
+            placement = VocabPlacement(
+                vocab_size=v, hot=max(1, min(int(round(hot_frac * v)), v - 1)),
+                n_shards=n_serve)
+            hot, cold = placement.split(full)
+        return cls._stage(placement, hot, cold, mesh, step=step, extra=extra)
+
+    @classmethod
+    def from_session(cls, session,
+                     mesh: Optional[Mesh] = None,
+                     hot_frac: float = SERVE_HOT_FRAC) -> "EmbeddingIndex":
+        """Index the live tables of a :class:`TrainSession` through its
+        shard-aware accessor (``embeddings_sharded`` — no ``(V, d)``
+        gather for sharded sessions)."""
+        hot, cold, placement = session.embeddings_sharded()
+        mesh = mesh or session.mesh or Mesh(np.array(jax.devices()[:1]),
+                                            ("data",))
+        if placement is None:
+            full = np.asarray(hot, np.float32)
+            v = full.shape[0]
+            placement = VocabPlacement(
+                vocab_size=v, hot=max(1, min(int(round(hot_frac * v)), v - 1)),
+                n_shards=int(mesh.shape["data"]))
+            hot, cold = placement.split(full)
+        return cls._stage(placement, np.asarray(hot), np.asarray(cold), mesh,
+                          step=session.state.batches_seen)
+
+    @classmethod
+    def _stage(cls, placement: VocabPlacement, hot: np.ndarray,
+               cold: np.ndarray, mesh: Mesh, step: Optional[int] = None,
+               extra: Optional[Dict] = None) -> "EmbeddingIndex":
+        """Place + normalize the split tables on device (the staging half
+        of a hot swap: the new snapshot is fully resident before the
+        serving pointer flips)."""
+        from repro.distributed.sharding import vocab_shard_sharding
+
+        hot_dev = _normalize(jnp.asarray(hot, jnp.float32))
+        cold_dev = jnp.asarray(cold, jnp.float32)
+        if int(mesh.shape["data"]) > 1:
+            cold_dev = jax.device_put(
+                cold_dev, vocab_shard_sharding(mesh, cold.shape[0]))
+        cold_dev = _normalize(cold_dev)
+        jax.block_until_ready((hot_dev, cold_dev))   # staged, not lazy
+        return cls(placement=placement, hot=hot_dev, cold=cold_dev,
+                   mesh=mesh, step=step, extra=dict(extra or {}))
+
+    # -- oracle access -------------------------------------------------------
+    def dense_embeddings(self) -> np.ndarray:
+        """The merged normalized ``(V, d)`` table — **oracle/test path
+        only** (parity reference for :func:`repro.serve.query.dense_topk`);
+        the serving path never materializes this."""
+        return self.placement.merge(np.asarray(self.hot),
+                                    np.asarray(self.cold))

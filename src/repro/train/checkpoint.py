@@ -12,7 +12,12 @@ by *rename* (never rmtree-then-rename, which loses the newest checkpoint if
 the process dies between the two), and the parent directory is fsynced
 after publish. :func:`_clean_stale` — run at every save and consulted by
 :func:`latest_step` — deletes interrupted ``*.tmp.*`` writes and recovers a
-displaced ``*.old.*`` directory whose final name went missing mid-publish.
+displaced ``*.old.*`` directory whose final name went missing mid-publish,
+but only once such a directory is :data:`STALE_GRACE_S` old — younger ones
+may belong to a publisher that is still mid-rename. That grace is what lets
+a *concurrent reader* (the serving snapshot watcher polling
+``latest_step`` while a supervisor trains and publishes into the same
+directory) share the directory safely without any cross-process locking.
 
 Reads are defensive: a directory that cannot be read back (truncated
 ``arrays.npz``, unparseable manifest, checksum mismatch) raises
@@ -37,6 +42,7 @@ import os
 import re
 import shutil
 import tempfile
+import time
 import zipfile
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
@@ -109,7 +115,27 @@ def _fsync_path(path: str) -> None:
         os.close(fd)
 
 
-def _clean_stale(ckpt_dir: str) -> None:
+# How old a step_N.tmp.* / step_N.old.* directory must be before
+# maintenance touches it. A live publisher's in-flight dirs are always
+# younger than this (a publish is seconds at most); anything older is a
+# crash leftover. Concurrent readers (the serving snapshot watcher
+# polling latest_step while a TrainSupervisor publishes) rely on this:
+# without the grace, a reader would rm -rf the publisher's tmp dir out
+# from under its rename, or rename a displaced .old back into a final
+# the publisher is about to rename onto.
+STALE_GRACE_S = 60.0
+
+
+def _older_than(path: str, grace_s: float) -> bool:
+    if grace_s <= 0:
+        return True
+    try:
+        return (time.time() - os.path.getmtime(path)) >= grace_s
+    except OSError:        # vanished under a concurrent cleaner
+        return False
+
+
+def _clean_stale(ckpt_dir: str, grace_s: float = STALE_GRACE_S) -> None:
     """Remove interrupted publishes; recover displaced finals.
 
     ``step_N.tmp*`` directories are incomplete writes — deleted. A
@@ -117,22 +143,31 @@ def _clean_stale(ckpt_dir: str) -> None:
     re-save of the same step: if the crash hit the window between the two
     renames (so ``step_N`` itself is missing), rename it back — the
     checkpoint is not lost; otherwise delete it.
+
+    Both actions are gated on the directory being at least ``grace_s``
+    old: fresh tmp/old dirs belong to a publisher that may still be
+    alive, and this function is called from read paths
+    (:func:`latest_step`) that run concurrently with it.
     """
     if not os.path.isdir(ckpt_dir):
         return
     for name in sorted(os.listdir(ckpt_dir)):
+        path = os.path.join(ckpt_dir, name)
         if re.fullmatch(r"step_\d+\.tmp(\..*)?", name):
-            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+            if _older_than(path, grace_s):
+                shutil.rmtree(path, ignore_errors=True)
             continue
         m = re.fullmatch(r"(step_\d+)\.old\..*", name)
-        if m:
-            path = os.path.join(ckpt_dir, name)
+        if m and _older_than(path, grace_s):
             final = os.path.join(ckpt_dir, m.group(1))
             if (not os.path.exists(final)
                     and os.path.exists(os.path.join(path, "manifest.json"))):
                 log.warning("recovering displaced checkpoint %s -> %s "
                             "(crash during publish)", name, m.group(1))
-                os.rename(path, final)
+                try:
+                    os.rename(path, final)
+                except OSError:   # lost the race to another recoverer
+                    pass
             else:
                 shutil.rmtree(path, ignore_errors=True)
 
@@ -243,7 +278,12 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
             return step
         log.warning("checkpoint step %d is partial — quarantining and "
                     "falling back", step)
-        quarantine(ckpt_dir, step)
+        try:
+            quarantine(ckpt_dir, step)
+        except OSError:
+            # a concurrent publisher pruned/re-published the dir between
+            # our check and the rename — nothing left to quarantine
+            pass
     return None
 
 

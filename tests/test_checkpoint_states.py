@@ -1,0 +1,228 @@
+"""Checkpoint directory states a concurrent reader observes while a
+publisher is live (DESIGN.md §9/§10): stale tmp dirs, displaced .old
+dirs, partially-written and quarantined steps — as seen through
+``list_steps`` / ``latest_step`` / ``peek``, the exact calls the serving
+snapshot watcher makes against an in-progress ``TrainSupervisor``."""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+def _save(d, step, mark=None):
+    ckpt.save(d, step, {"w": np.full(8, step, dtype=np.float32)},
+              extra={"mark": mark if mark is not None else step})
+
+
+def _backdate(path, by_s=2 * ckpt.STALE_GRACE_S):
+    t = time.time() - by_s
+    os.utime(path, (t, t))
+
+
+# -- what maintenance-state dirs look like to the read API --------------------
+def test_list_steps_ignores_maintenance_dirs(tmp_path):
+    d = str(tmp_path)
+    _save(d, 2)
+    _save(d, 4)
+    os.makedirs(os.path.join(d, "step_00000006.tmp.abc"))      # in flight
+    os.makedirs(os.path.join(d, "step_00000008.corrupt"))      # quarantined
+    os.rename(os.path.join(d, "step_00000002"),
+              os.path.join(d, "step_00000002.old.xyz"))        # displaced
+    os.makedirs(os.path.join(d, "step_00000010"))              # no manifest
+    assert ckpt.list_steps(d) == [4]
+
+
+def test_latest_step_on_missing_and_empty_dir(tmp_path):
+    assert ckpt.latest_step(str(tmp_path / "nope")) is None
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
+def test_latest_step_with_only_inflight_tmp(tmp_path):
+    """Nothing published yet, one publish in flight: the poller sees no
+    step and must not disturb the tmp dir."""
+    d = str(tmp_path)
+    inflight = os.path.join(d, "step_00000002.tmp.abc")
+    os.makedirs(inflight)
+    assert ckpt.latest_step(d) is None
+    assert os.path.isdir(inflight)
+
+
+def test_peek_skips_newer_inflight_publish(tmp_path):
+    """peek(step=None) resolves through latest_step: a newer step still
+    being written (tmp dir) is invisible; the finished step is served."""
+    d = str(tmp_path)
+    _save(d, 2)
+    os.makedirs(os.path.join(d, "step_00000004.tmp.abc"))
+    leaves, extra = ckpt.peek(d)
+    assert extra["mark"] == 2
+    assert leaves["w"]["shape"] == (8,)
+
+
+def test_latest_step_quarantines_partial_missing_arrays(tmp_path):
+    d = str(tmp_path)
+    _save(d, 2)
+    _save(d, 4)
+    os.remove(os.path.join(d, "step_00000004", "arrays.npz"))
+    assert ckpt.latest_step(d) == 2
+    assert any(n.startswith("step_00000004.corrupt")
+               for n in os.listdir(d))
+    # quarantined steps stay out of every subsequent scan
+    assert ckpt.list_steps(d) == [2]
+    assert ckpt.latest_step(d) == 2
+
+
+def test_latest_step_quarantines_unparseable_manifest(tmp_path):
+    d = str(tmp_path)
+    _save(d, 2)
+    _save(d, 4)
+    with open(os.path.join(d, "step_00000004", "manifest.json"), "w") as f:
+        f.write("{truncated")
+    assert ckpt.latest_step(d) == 2
+    assert any(".corrupt" in n for n in os.listdir(d))
+
+
+def test_latest_step_all_steps_partial_returns_none(tmp_path):
+    d = str(tmp_path)
+    _save(d, 2)
+    os.remove(os.path.join(d, "step_00000002", "arrays.npz"))
+    assert ckpt.latest_step(d) is None
+    with pytest.raises(FileNotFoundError):
+        ckpt.peek(d)
+
+
+def test_peek_reports_split_table_layout(tmp_path):
+    """peek surfaces the leaf names + vocab_shard extra the serving index
+    switches on — without touching arrays.npz."""
+    from repro.distributed.vocab_placement import VocabPlacement
+    d = str(tmp_path)
+    pl = VocabPlacement(vocab_size=32, hot=8, n_shards=2)
+    hot = np.zeros((8, 4), np.float32)
+    cold = np.zeros((pl.cold_pad, 4), np.float32)
+    ckpt.save(d, 6, {"hot_in": hot, "cold_in": cold,
+                     "hot_out": hot, "cold_out": cold},
+              extra={"vocab_shard": pl.to_extra()})
+    os.remove(os.path.join(d, "step_00000006", "arrays.npz"))
+    # arrays gone: restore would fail, but peek still answers from the
+    # manifest alone
+    leaves, extra = ckpt.peek(d, step=6)
+    assert set(leaves) == {"hot_in", "cold_in", "hot_out", "cold_out"}
+    assert leaves["cold_in"]["shape"] == (pl.cold_pad, 4)
+    assert VocabPlacement.from_extra(extra["vocab_shard"]) == pl
+
+
+def test_stale_maintenance_dirs_cleaned_after_grace(tmp_path):
+    """Crash leftovers older than the grace are swept by the next poll;
+    fresh ones (a live publisher's) are left alone."""
+    d = str(tmp_path)
+    _save(d, 2)
+    old_tmp = os.path.join(d, "step_00000004.tmp.dead")
+    fresh_tmp = os.path.join(d, "step_00000006.tmp.live")
+    os.makedirs(old_tmp)
+    os.makedirs(fresh_tmp)
+    _backdate(old_tmp)
+    assert ckpt.latest_step(d) == 2
+    assert not os.path.exists(old_tmp)       # crash leftover swept
+    assert os.path.isdir(fresh_tmp)          # in-flight publish untouched
+
+
+# -- concurrent publisher vs poller -------------------------------------------
+def test_concurrent_publisher_and_poller(tmp_path):
+    """A publisher saving a stream of checkpoints while a poller hammers
+    latest_step/peek/restore: every publish survives (the reader's
+    maintenance never deletes an in-flight tmp or recovers a mid-publish
+    .old), the poller never crashes, and steps appear in order."""
+    d = str(tmp_path)
+    n_steps = 30
+    errors = []
+    seen = []
+
+    def publisher():
+        try:
+            for s in range(1, n_steps + 1):
+                _save(d, s)
+        except Exception as e:  # noqa: BLE001
+            errors.append(("publisher", e))
+
+    def poller():
+        try:
+            last = 0
+            while last < n_steps and not errors:
+                step = ckpt.latest_step(d)
+                if step is None:
+                    continue
+                assert step >= last, f"latest_step went back: {last}->{step}"
+                if step != last:
+                    seen.append(step)
+                    last = step
+                # the step latest_step returned must be readable right now
+                # (unless the publisher already pruned it: keep=3)
+                try:
+                    _, extra = ckpt.peek(d, step=step)
+                    assert extra["mark"] == step
+                except (ckpt.CorruptCheckpoint, FileNotFoundError, OSError):
+                    live = ckpt.list_steps(d)
+                    assert step not in live, f"step {step} unreadable"
+        except Exception as e:  # noqa: BLE001
+            errors.append(("poller", e))
+
+    threads = [threading.Thread(target=publisher),
+               threading.Thread(target=poller)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120.0)
+    assert not errors, errors
+    assert seen and seen[-1] == n_steps
+    assert seen == sorted(seen)
+    # nothing corrupt was manufactured by the concurrency itself
+    assert not [n for n in os.listdir(str(tmp_path)) if ".corrupt" in n]
+
+
+def test_concurrent_same_step_resave_vs_poller(tmp_path):
+    """Same-step re-saves (the supervisor's rollback-then-recheckpoint
+    path) displace via .old while a poller reads: the poller must always
+    see a readable step and never resurrect the displaced dir."""
+    d = str(tmp_path)
+    _save(d, 4, mark=0)
+    errors = []
+    stop = threading.Event()
+
+    def resaver():
+        try:
+            for i in range(1, 25):
+                _save(d, 4, mark=i)
+        except Exception as e:  # noqa: BLE001
+            errors.append(("resaver", e))
+        finally:
+            stop.set()
+
+    def poller():
+        try:
+            while not stop.is_set():
+                step = ckpt.latest_step(d)
+                assert step in (None, 4)   # mid-displacement: briefly gone
+                try:
+                    _, extra = ckpt.peek(d, step=4)
+                except ckpt.CorruptCheckpoint:
+                    continue   # displacement window — retry, like the
+                               # snapshot watcher's load-failure path
+                assert 0 <= extra["mark"] <= 24
+        except Exception as e:  # noqa: BLE001
+            errors.append(("poller", e))
+
+    threads = [threading.Thread(target=resaver),
+               threading.Thread(target=poller)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120.0)
+    assert not errors, errors
+    _, extra = ckpt.peek(d, step=4)
+    assert extra["mark"] == 24
+    # no .old leftovers old enough to matter, no corrupt dirs
+    assert not [n for n in os.listdir(d) if ".corrupt" in n]

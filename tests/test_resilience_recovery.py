@@ -202,17 +202,38 @@ def test_partial_dir_latest_step_quarantines(tmp_path):
     assert any(".corrupt" in n for n in os.listdir(d))
 
 
+def _backdate(path, by_s=2 * ckpt.STALE_GRACE_S):
+    """Age a dir past the maintenance grace (a crash leftover, not a
+    live publisher's in-flight dir)."""
+    t = time.time() - by_s
+    os.utime(path, (t, t))
+
+
 def test_clean_stale_recovers_displaced_checkpoint(tmp_path):
     """A crash between displace-rename and publish-rename must not lose
-    the checkpoint: the displaced .old dir is renamed back."""
+    the checkpoint: the displaced .old dir is renamed back (once it is
+    old enough to be a crash leftover rather than a live publish)."""
     d = str(tmp_path / "ck")
     _save_two(d)
     final = os.path.join(d, "step_00000004")
     os.rename(final, final + ".old.deadbeef")   # simulate the crash window
+    _backdate(final + ".old.deadbeef")
     assert ckpt.latest_step(d) == 4             # recovered, not lost
     like = {"w": np.zeros(8, dtype=np.float32)}
     _, extra = ckpt.restore(d, like, step=4)
     assert extra["mark"] == 4
+
+
+def test_fresh_displaced_dir_left_for_live_publisher(tmp_path):
+    """A *young* .old dir may belong to a publisher between its two
+    renames — a concurrent latest_step must not rename it back (the
+    publisher's tmp->final rename would then hit an existing dir)."""
+    d = str(tmp_path / "ck")
+    _save_two(d)
+    final = os.path.join(d, "step_00000004")
+    os.rename(final, final + ".old.deadbeef")
+    assert ckpt.latest_step(d) == 2             # not recovered (yet)
+    assert os.path.isdir(final + ".old.deadbeef")   # and not deleted
 
 
 def test_stale_tmp_dirs_cleaned_on_save(tmp_path):
@@ -220,9 +241,21 @@ def test_stale_tmp_dirs_cleaned_on_save(tmp_path):
     _save_two(d)
     stale = os.path.join(d, "step_00000006.tmp.abc123")
     os.makedirs(stale)
+    _backdate(stale)
     ckpt.save(d, 8, {"w": np.zeros(3, dtype=np.float32)})
     assert not os.path.exists(stale)
     assert not [n for n in os.listdir(d) if ".tmp" in n]
+
+
+def test_fresh_tmp_dir_survives_concurrent_reader(tmp_path):
+    """A young tmp dir is an in-flight publish: a concurrent reader's
+    latest_step must neither delete it nor surface it as a step."""
+    d = str(tmp_path / "ck")
+    _save_two(d)
+    inflight = os.path.join(d, "step_00000006.tmp.abc123")
+    os.makedirs(inflight)
+    assert ckpt.latest_step(d) == 4
+    assert os.path.isdir(inflight)
 
 
 def test_checksum_corruption_detected(tmp_path):

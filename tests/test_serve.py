@@ -1,0 +1,407 @@
+"""Serving subsystem (DESIGN.md §10): index loading, sharded top-k
+parity, snapshot hot-swap, request batching, and the serve chaos bar."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.vocab_placement import VocabPlacement
+from repro.serve import (EmbeddingIndex, EmbeddingServer, SnapshotWatcher,
+                         dense_topk, make_topk_fn)
+from repro.serve.chaos import SCHEDULES, _publish, run_serve_chaos
+from repro.serve.index import _restripe
+from repro.train import checkpoint as ckpt
+
+V, HOT, D = 64, 12, 16
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+def _table(seed=0, v=V, d=D):
+    return np.random.default_rng(seed).standard_normal(
+        (v, d)).astype(np.float32)
+
+
+def _index(seed=0, v=V, hot=HOT, d=D, step=0):
+    placement = VocabPlacement(vocab_size=v, hot=hot, n_shards=1)
+    h, c = placement.split(_table(seed, v, d))
+    return EmbeddingIndex._stage(placement, h, c, _mesh1(), step=step)
+
+
+# -- index construction -------------------------------------------------------
+def test_index_rows_normalized():
+    idx = _index()
+    dense = idx.dense_embeddings()
+    np.testing.assert_allclose(np.linalg.norm(dense, axis=1),
+                               np.ones(V), atol=1e-5)
+
+
+def test_index_load_split_checkpoint_without_merge(tmp_path, monkeypatch):
+    """Loading a split checkpoint restores only the input-table leaves
+    and never calls VocabPlacement.merge (the no-(V,d)-reassembly
+    contract)."""
+    d = str(tmp_path)
+    table = _table(1)
+    placement = VocabPlacement(vocab_size=V, hot=HOT, n_shards=1)
+    _publish(d, 30, table, placement)
+
+    def boom(*a, **k):
+        raise AssertionError("serving load reassembled the full table")
+    monkeypatch.setattr(VocabPlacement, "merge", boom)
+    idx = EmbeddingIndex.load(d)
+    assert idx.step == 30 and idx.vocab_size == V
+    assert idx.placement == placement
+    monkeypatch.undo()
+    norm = table / np.maximum(
+        np.linalg.norm(table, axis=1, keepdims=True), 1e-12)
+    np.testing.assert_allclose(idx.dense_embeddings(), norm, atol=1e-6)
+
+
+def test_index_load_replicated_checkpoint(tmp_path):
+    """A replicated (w_in/w_out) checkpoint is split under a prefix-head
+    placement at load time."""
+    d = str(tmp_path)
+    table = _table(2)
+    ckpt.save(d, 5, {"w_in": table, "w_out": table * 0.5})
+    idx = EmbeddingIndex.load(d, hot_frac=0.25)
+    assert idx.placement.hot == 16 and idx.n_shards == 1
+    norm = table / np.maximum(
+        np.linalg.norm(table, axis=1, keepdims=True), 1e-12)
+    np.testing.assert_allclose(idx.dense_embeddings(), norm, atol=1e-6)
+
+
+def test_restripe_permutes_between_layouts():
+    """Elastic serving: re-striping cold rows between shard counts is a
+    pure permutation — merge(src) == merge(dst) row for row."""
+    table = _table(3)
+    src = VocabPlacement(vocab_size=V, hot=HOT, n_shards=4)
+    dst = VocabPlacement(vocab_size=V, hot=HOT, n_shards=2)
+    hot, cold_src = src.split(table)
+    cold_dst = _restripe(cold_src, src, dst)
+    np.testing.assert_array_equal(dst.merge(hot, cold_dst), table)
+
+
+def test_index_load_restripes_on_shard_count_change(tmp_path):
+    """A checkpoint written on 2 shards serves on 1 without reassembly:
+    the dense views agree exactly."""
+    d = str(tmp_path)
+    table = _table(4)
+    _publish(d, 7, table, VocabPlacement(vocab_size=V, hot=HOT, n_shards=2))
+    idx = EmbeddingIndex.load(d)      # 1-device mesh -> 1-shard layout
+    assert idx.n_shards == 1
+    norm = table / np.maximum(
+        np.linalg.norm(table, axis=1, keepdims=True), 1e-12)
+    np.testing.assert_allclose(idx.dense_embeddings(), norm, atol=1e-6)
+
+
+def test_index_load_no_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        EmbeddingIndex.load(str(tmp_path / "empty"))
+
+
+# -- sharded top-k parity -----------------------------------------------------
+def test_topk_parity_boundary_ids_1shard():
+    idx = _index()
+    dense = idx.dense_embeddings()
+    # hot/cold boundary: last hot id, first/second cold ids, edges
+    ids = np.array([0, HOT - 1, HOT, HOT + 1, V - 1], np.int32)
+    fn = make_topk_fn(idx.placement, idx.mesh, mode="nn", k=6)
+    got_ids, got_sc = fn(idx.hot, idx.cold, ids)
+    want_ids, want_sc = dense_topk(dense, ids, k=6, mode="nn")
+    np.testing.assert_array_equal(np.asarray(got_ids), want_ids)
+    np.testing.assert_allclose(np.asarray(got_sc), want_sc, atol=1e-6)
+
+
+def test_topk_analogy_parity_1shard():
+    idx = _index(5)
+    dense = idx.dense_embeddings()
+    triples = np.array([[0, 1, 2], [HOT - 1, HOT, HOT + 1],
+                        [V - 1, 0, HOT]], np.int32)
+    fn = make_topk_fn(idx.placement, idx.mesh, mode="analogy", k=4)
+    got_ids, got_sc = fn(idx.hot, idx.cold, triples)
+    want_ids, want_sc = dense_topk(dense, triples, k=4, mode="analogy")
+    np.testing.assert_array_equal(np.asarray(got_ids), want_ids)
+    np.testing.assert_allclose(np.asarray(got_sc), want_sc, atol=1e-6)
+
+
+def test_topk_ties_break_by_id():
+    """Duplicate rows produce tied scores; both paths must rank the
+    lower id first (the lexicographic tie-break parity depends on)."""
+    table = _table(6)
+    table[HOT + 3] = table[2]           # a cold duplicate of a hot row
+    placement = VocabPlacement(vocab_size=V, hot=HOT, n_shards=1)
+    h, c = placement.split(table)
+    idx = EmbeddingIndex._stage(placement, h, c, _mesh1())
+    ids = np.array([5, 40], np.int32)
+    fn = make_topk_fn(placement, idx.mesh, mode="nn", k=V - 1)
+    got_ids, _ = fn(idx.hot, idx.cold, ids)
+    want_ids, _ = dense_topk(idx.dense_embeddings(), ids, k=V - 1)
+    np.testing.assert_array_equal(np.asarray(got_ids), want_ids)
+
+
+def test_topk_excludes_query_words():
+    idx = _index(7)
+    ids = np.arange(8, dtype=np.int32)
+    fn = make_topk_fn(idx.placement, idx.mesh, mode="nn", k=5)
+    got_ids, _ = fn(idx.hot, idx.cold, ids)
+    for q, row in zip(ids, np.asarray(got_ids)):
+        assert q not in row
+
+
+def test_topk_k_too_large_raises():
+    idx = _index()
+    with pytest.raises(ValueError):
+        make_topk_fn(idx.placement, idx.mesh, k=V + 1)
+    with pytest.raises(ValueError):
+        make_topk_fn(idx.placement, idx.mesh, mode="cosmul")
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1),     # seed
+       st.integers(24, 80),           # vocab
+       st.integers(2, 16),            # hot head
+       st.integers(1, 8),             # k
+       st.integers(1, 6))             # query batch
+def test_topk_parity_property_1shard(seed, v, hot, k, b):
+    rng = np.random.default_rng(seed)
+    hot = min(hot, v - 2)
+    table = rng.standard_normal((v, 8)).astype(np.float32)
+    placement = VocabPlacement(vocab_size=v, hot=hot, n_shards=1)
+    h, c = placement.split(table)
+    idx = EmbeddingIndex._stage(placement, h, c, _mesh1())
+    ids = rng.integers(v, size=b).astype(np.int32)
+    fn = make_topk_fn(placement, idx.mesh, mode="nn", k=k)
+    got_ids, got_sc = fn(idx.hot, idx.cold, ids)
+    want_ids, want_sc = dense_topk(idx.dense_embeddings(), ids, k=k)
+    np.testing.assert_array_equal(np.asarray(got_ids), want_ids)
+    np.testing.assert_allclose(np.asarray(got_sc), want_sc, atol=1e-6)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_topk_parity_multishard(subproc, n_shards):
+    """Property-style parity across real shard counts (fake devices):
+    random ids plus the hot/cold boundary, nn and analogy."""
+    r = subproc(f"""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.distributed.vocab_placement import VocabPlacement
+        from repro.serve.index import EmbeddingIndex
+        from repro.serve.query import dense_topk, make_topk_fn
+        n = {n_shards}
+        mesh = Mesh(np.array(jax.devices()[:n]), ("data",))
+        for seed in range(3):
+            rng = np.random.default_rng(seed)
+            v = int(rng.integers(40, 90)); hot = int(rng.integers(4, 14))
+            table = rng.standard_normal((v, 8)).astype(np.float32)
+            pl = VocabPlacement(vocab_size=v, hot=hot, n_shards=n)
+            h, c = pl.split(table)
+            idx = EmbeddingIndex._stage(pl, h, c, mesh)
+            dense = idx.dense_embeddings()
+            ids = rng.integers(v, size=9).astype(np.int32)
+            ids[:4] = [hot - 1, hot, hot + 1, v - 1]
+            fn = make_topk_fn(pl, mesh, mode="nn", k=6)
+            gi, gs = fn(idx.hot, idx.cold, ids)
+            wi, ws = dense_topk(dense, ids, k=6)
+            assert np.array_equal(np.asarray(gi), wi), (seed, gi, wi)
+            assert np.allclose(np.asarray(gs), ws, atol=1e-6)
+            tri = rng.integers(v, size=(4, 3)).astype(np.int32)
+            fa = make_topk_fn(pl, mesh, mode="analogy", k=5)
+            gi, gs = fa(idx.hot, idx.cold, tri)
+            wi, ws = dense_topk(dense, tri, k=5, mode="analogy")
+            assert np.array_equal(np.asarray(gi), wi), (seed, gi, wi)
+            assert np.allclose(np.asarray(gs), ws, atol=1e-6)
+        print("MULTISHARD_PARITY_OK")
+    """, n_devices=n_shards)
+    assert "MULTISHARD_PARITY_OK" in r.stdout, r.stdout + r.stderr
+
+
+# -- session accessors --------------------------------------------------------
+def _tiny_session(vocab_shard):
+    from repro.configs.w2v import smoke
+    from repro.core.trainer import TrainSession
+    from repro.data.batching import BatchingPipeline
+    from repro.data.corpus import synthetic_cluster_corpus
+
+    cfg = smoke(epochs=1, dim=16, vocab_shard=vocab_shard)
+    corpus = synthetic_cluster_corpus(n_clusters=4, words_per_cluster=8,
+                                      n_sentences=120, mean_len=8, seed=0)
+    sess = TrainSession(BatchingPipeline(corpus, cfg), cfg, backend="jnp")
+    sess.train(max_batches=2)
+    return sess
+
+
+def test_embeddings_sharded_no_gather():
+    sess = _tiny_session(vocab_shard=True)
+    hot, cold, placement = sess.embeddings_sharded()
+    assert placement is sess.placement
+    assert hot.shape == (placement.hot, 16)
+    assert cold.shape == (placement.cold_pad, 16)
+    np.testing.assert_array_equal(
+        placement.merge(np.asarray(hot), np.asarray(cold)),
+        sess.embeddings())
+
+
+def test_embeddings_sharded_replicated_session():
+    sess = _tiny_session(vocab_shard=False)
+    full, cold, placement = sess.embeddings_sharded()
+    assert cold is None and placement is None
+    np.testing.assert_array_equal(np.asarray(full), sess.embeddings())
+
+
+@pytest.mark.parametrize("vocab_shard", [False, True])
+def test_from_session_matches_dense(vocab_shard):
+    sess = _tiny_session(vocab_shard)
+    idx = EmbeddingIndex.from_session(sess)
+    e = sess.embeddings()
+    norm = e / np.maximum(np.linalg.norm(e, axis=1, keepdims=True), 1e-12)
+    np.testing.assert_allclose(idx.dense_embeddings(), norm, atol=1e-6)
+
+
+# -- snapshot watcher ---------------------------------------------------------
+def test_watcher_swaps_and_tolerates_corrupt(tmp_path):
+    d = str(tmp_path)
+    placement = VocabPlacement(vocab_size=V, hot=HOT, n_shards=1)
+    _publish(d, 10, _table(8), placement)
+    w = SnapshotWatcher(d, poll_s=0.01)
+    assert w.poll_once() and w.current().step == 10
+
+    # newer-but-corrupt checkpoint: swap refused, old snapshot serves on
+    _publish(d, 20, _table(9), placement)
+    npz = os.path.join(d, "step_00000020", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    w.poll_once()
+    assert w.current().step == 10 and w.load_failures >= 1
+
+    # a good one after it is picked up (corrupt step was quarantined)
+    _publish(d, 30, _table(10), placement)
+    assert w.poll_once() and w.current().step == 30
+    assert w.swaps == 2
+
+
+def test_watcher_crash_and_restart(tmp_path):
+    d = str(tmp_path)
+    placement = VocabPlacement(vocab_size=V, hot=HOT, n_shards=1)
+    _publish(d, 10, _table(11), placement)
+    w = SnapshotWatcher(d, poll_s=0.01)
+    with w:
+        w.wait_ready(timeout=30)
+        w.inject_crash()
+        deadline = time.monotonic() + 10
+        while w.alive and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert not w.alive and w.crashes == 1
+        assert w.current().step == 10        # serving survives the crash
+        _publish(d, 20, _table(12), placement)
+        w.start()                            # restart picks up missed step
+        deadline = time.monotonic() + 10
+        while w.current().step != 20 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert w.current().step == 20
+
+
+def test_watcher_current_before_ready_raises(tmp_path):
+    w = SnapshotWatcher(str(tmp_path), poll_s=0.01)
+    with pytest.raises(RuntimeError):
+        w.current()
+
+
+# -- server batching ----------------------------------------------------------
+def test_server_coalesces_and_answers(tmp_path):
+    idx = _index(13, step=42)
+    dense = idx.dense_embeddings()
+    with EmbeddingServer(idx, batch_size=8, deadline_ms=20.0,
+                         k=4) as server:
+        reqs = [server.submit("nn", np.array([i], np.int32))
+                for i in range(8)]
+        results = [r.wait(30.0) for r in reqs]
+        # a full row budget arriving within the deadline rides one batch
+        assert server.batches <= 2
+        for i, res in enumerate(results):
+            assert res.snapshot_step == 42
+            want_ids, want_sc = dense_topk(dense, np.array([i], np.int32),
+                                           k=4)
+            np.testing.assert_array_equal(res.ids, want_ids)
+            np.testing.assert_allclose(res.scores, want_sc, atol=1e-6)
+
+
+def test_server_mixed_kinds_never_share_a_batch():
+    idx = _index(14)
+    with EmbeddingServer(idx, batch_size=16, deadline_ms=5.0,
+                         k=3) as server:
+        nn = server.submit("nn", np.array([1, 2], np.int32))
+        an = server.submit("analogy", np.array([[1, 2, 3]], np.int32))
+        r_nn, r_an = nn.wait(30.0), an.wait(30.0)
+        assert r_nn.ids.shape == (2, 3)
+        assert r_an.ids.shape == (1, 3)
+        assert server.batches == 2
+
+
+def test_server_close_drains_pending():
+    idx = _index(15)
+    server = EmbeddingServer(idx, batch_size=4, deadline_ms=1.0, k=3)
+    reqs = [server.submit("nn", np.array([i % V], np.int32))
+            for i in range(25)]
+    server.close()
+    assert all(r.event.is_set() for r in reqs)          # zero dropped
+    assert server.served == 25
+    with pytest.raises(RuntimeError):
+        server.submit("nn", np.array([0], np.int32))
+
+
+def test_server_rejects_bad_requests():
+    idx = _index(16)
+    with EmbeddingServer(idx, batch_size=4, k=3) as server:
+        with pytest.raises(ValueError):
+            server.submit("nn", np.arange(5, dtype=np.int32))   # > batch
+        with pytest.raises(ValueError):
+            server.submit("cosmul", np.array([0], np.int32))
+        with pytest.raises(ValueError):
+            server.neighbors(np.array([0], np.int32), k=99)
+
+
+def test_server_concurrent_submitters():
+    idx = _index(17)
+    dense = idx.dense_embeddings()
+    errors = []
+
+    def client(seed):
+        try:
+            rng = np.random.default_rng(seed)
+            with_ids = rng.integers(V, size=3).astype(np.int32)
+            res = server.neighbors(with_ids, timeout=30.0)
+            want_ids, _ = dense_topk(dense, with_ids, k=5)
+            assert np.array_equal(res.ids, want_ids)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    with EmbeddingServer(idx, batch_size=8, deadline_ms=2.0,
+                         k=5) as server:
+        threads = [threading.Thread(target=client, args=(s,))
+                   for s in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30.0)
+    assert not errors, errors
+
+
+# -- chaos bar ----------------------------------------------------------------
+def test_serve_chaos_ci_schedule_zero_dropped_zero_torn():
+    rep = run_serve_chaos(SCHEDULES["ci"], timeout=30.0)
+    assert rep["dropped"] == 0, rep
+    assert rep["torn"] == 0, rep
+    assert rep["errors"] == 0, rep
+    assert rep["crashes"] == len(SCHEDULES["ci"].crash_at)
+    assert rep["swaps"] >= 2                  # live swap + post-restart swap
+    assert rep["steps_served"] >= 2           # answers from >1 snapshot
+    assert rep["final_step_served"] == 10 * len(SCHEDULES["ci"].publish_at)
