@@ -101,6 +101,29 @@ def vocab_shard_rows() -> List[str]:
             f"exchange_shrink={dense_kb / max(exact_kb, 1e-9):.1f}x "
             f"bucket_capacity={ex.bucket_capacity} "
             f"bucket_occupancy={ex.bucket_occupancy:.2f}"))
+    # -- mixed-precision wire pricing at the gate point (n=4): the exact
+    # path moves rows in storage dtype (DESIGN.md §11), so int8 cold rows
+    # cost d+4 wire bytes (payload + per-row f32 scale) and bf16 rows 2d —
+    # vs f32's 4d. Each row carries its own f32 sibling so compare.py
+    # gates the reduction within a single run (no cross-run drift). The
+    # dense flavor stays f32 on the wire regardless (psum_scatter sums in
+    # f32), which is exactly why the gate is on the exact path.
+    pl4 = VocabPlacement.plan(pipe.vocab.counts, 4)
+    ex4 = plan_exchange(batch, pl4)
+    f32_bytes = ex4.bytes_device_exact(DIM)
+    for dt in ("int8", "bfloat16"):
+        mixed = ex4.bytes_device_exact(DIM, dtype=dt)
+        table_mb = (pl4.hot * DIM * 4            # hot head stays f32 here
+                    + pl4.cold_per_shard
+                    * ex4.row_bytes(DIM, dt)) * 2 / 1e6
+        rows.append(fmt_row(
+            f"memory/vocab_shard_n4_{'bf16' if dt == 'bfloat16' else dt}",
+            0.0,
+            f"cold_dtype={dt} exchange_bytes={mixed:.0f} "
+            f"exchange_bytes_f32={f32_bytes:.0f} "
+            f"exchange_reduction_vs_f32={mixed / f32_bytes:.3f}x "
+            f"wire_row_bytes={ex4.row_bytes(DIM, dt)} "
+            f"mb_per_device={table_mb:.2f}"))
     # -- vocab-growth sweep at fixed shards: exchange tracks distinct rows
     # per shard (bounded by the shard's batch slice), NOT V --------------
     n = 16

@@ -79,7 +79,34 @@ def run() -> List[str]:
             f"quality/tiled_T{t}_gate", 0.0,
             f"tiled_vs_sequential_separation_ratio={q / max(a8, 1e-9):.4f} "
             f"(1.00±0.01 expected)"))
+    rows.append(_mixed_precision_gate(corpus, cfg, inv))
     return rows
+
+
+def _mixed_precision_gate(corpus, cfg, inv) -> str:
+    """DESIGN.md §11 quality gate: converged bf16-hot/int8-cold training
+    (stochastic-rounding stores, keyed per-batch) must land within 1% of
+    the f32 run's cluster separation. Both sides go through the same
+    ``TrainSession`` path on identical deterministic batch streams, so the
+    only difference is table storage precision."""
+    import dataclasses
+
+    from repro.core.trainer import TrainSession
+
+    def separation(tables: str) -> float:
+        c = dataclasses.replace(cfg, tables=tables, epochs=GATE_EPOCHS)
+        sess = TrainSession(BatchingPipeline(corpus, c), c, backend="jnp")
+        sess.train(epochs=GATE_EPOCHS)
+        return evaluate(np.asarray(sess.embeddings()), inv,
+                        seed=1)["separation"]
+
+    f32 = separation("")
+    mixed = separation("hot=bf16:frac=0.1,cold=int8,shards=1")
+    return fmt_row(
+        "quality/mixed_precision_gate", 0.0,
+        f"mixed_vs_f32_separation_ratio={mixed / max(f32, 1e-9):.4f} "
+        f"mixed_separation={mixed:.3f} f32_separation={f32:.3f} "
+        f"(1.00±0.01 expected)")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ from benchmarks.common import (bench_cfg, bench_pipeline, fmt_row,
 from repro.core.baselines import matrix_sgns, naive_sgns
 from repro.kernels import ops
 from repro.kernels.registry import StepInputs
+from repro.kernels.tables import Tables
 
 
 def run() -> List[str]:
@@ -67,8 +68,9 @@ def run() -> List[str]:
     step = StepInputs(jnp.asarray(small.tokens[sl]),
                       jnp.asarray(small.negs[sl]),
                       jnp.asarray(small.lengths[sl]), jnp.float32(0.025))
-    wi, wo = ops.sgns_update(st.w_in, st.w_out, step, cfg,
-                             backend="pallas_interpret")
+    out = ops.step(Tables(w_in=st.w_in, w_out=st.w_out), step, cfg,
+                   backend="pallas_interpret")
+    wi = out.w_in
     wi.block_until_ready()
     dt = time.perf_counter() - t0
     words = int(small.lengths[sl].sum())

@@ -19,6 +19,7 @@ from repro.data.batching import BatchingPipeline, plan_tiles
 from repro.data.corpus import synthetic_cluster_corpus, synthetic_zipf_corpus
 from repro.kernels import ops
 from repro.kernels.registry import StepInputs
+from repro.kernels.tables import Tables
 
 
 def bench_cfg(**kw) -> W2VConfig:
@@ -60,11 +61,12 @@ def train_w2v(update: Callable, pipe: BatchingPipeline, cfg: W2VConfig,
 
 
 def w2v_seq_update(backend: str, cfg: W2VConfig) -> Callable:
-    """Sequential-backend update through the engine API (`ops.sgns_update`)."""
+    """Sequential-backend update through the engine API (`ops.step`)."""
     def update(wi, wo, b, lr):
         step = StepInputs(jnp.asarray(b.tokens), jnp.asarray(b.negs),
                           jnp.asarray(b.lengths), jnp.asarray(lr))
-        return ops.sgns_update(wi, wo, step, cfg, backend=backend)
+        out = ops.step(Tables(w_in=wi, w_out=wo), step, cfg, backend=backend)
+        return out.w_in, out.w_out
     return update
 
 
@@ -84,7 +86,9 @@ def w2v_tiled_update(tile: int, cfg: W2VConfig, use_batch_plan: bool = False,
                           jnp.asarray(b.lengths), jnp.asarray(lr),
                           jnp.asarray(p.uniq), jnp.asarray(p.scatter),
                           jnp.asarray(p.ucount), jnp.asarray(p.strict))
-        return ops.sgns_update(wi, wo, step, cfg, backend="jnp_tiled")
+        out = ops.step(Tables(w_in=wi, w_out=wo), step, cfg,
+                       backend="jnp_tiled")
+        return out.w_in, out.w_out
     return update
 
 

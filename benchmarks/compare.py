@@ -208,6 +208,39 @@ def check_serving(baseline: Dict[str, dict], current: Dict[str, dict],
     return failures
 
 
+def check_mixed_precision(current: Dict[str, dict], quality_delta: float,
+                          max_exchange_ratio: float) -> List[str]:
+    """DESIGN.md §11 gates, both on the *current* run alone (each mixed
+    bench row carries its own f32 sibling, so no baseline drift): quantized
+    exchange must actually shrink the wire (``exchange_reduction_vs_f32``
+    at or below ``max_exchange_ratio`` — int8 is ~0.26x at d=128, bf16
+    0.5x), and mixed-precision training quality must stay within the same
+    1% separation bar as the tiled kernels."""
+    failures = []
+    for name, cur in sorted(current.items()):
+        ratio = cur.get("exchange_reduction_vs_f32")
+        if isinstance(ratio, (int, float)):
+            ok = ratio <= max_exchange_ratio
+            print(f"  [{'ok' if ok else 'REGRESSED'}] {name}: "
+                  f"exchange_reduction_vs_f32={ratio:.3f}x "
+                  f"(<= {max_exchange_ratio:.2f}x required)")
+            if not ok:
+                failures.append(
+                    f"{name}: quantized exchange at {ratio:.3f}x of f32 "
+                    f"bytes (> {max_exchange_ratio:.2f}x allowed — storage "
+                    f"dtype is not reaching the wire)")
+        ratio = cur.get("mixed_vs_f32_separation_ratio")
+        if isinstance(ratio, (int, float)):
+            ok = ratio >= 1.0 - quality_delta
+            print(f"  [{'ok' if ok else 'REGRESSED'}] {name}: "
+                  f"mixed_vs_f32_separation_ratio={ratio:.4f}")
+            if not ok:
+                failures.append(
+                    f"{name}: mixed/f32 separation ratio {ratio:.4f} below "
+                    f"{1.0 - quality_delta:.2f} gate")
+    return failures
+
+
 def check_quality(current: Dict[str, dict], quality_delta: float,
                   max_tile: int) -> List[str]:
     failures = []
@@ -242,6 +275,11 @@ def main() -> int:
                     help="allowed tiled-vs-sequential quality loss")
     ap.add_argument("--quality-max-tile", type=int, default=8,
                     help="largest T the quality gate applies to")
+    ap.add_argument("--max-mixed-exchange-ratio", type=float, default=0.55,
+                    help="required ceiling on quantized-vs-f32 exchange "
+                         "bytes (current run; int8 at d=128 is ~0.26x, "
+                         "bf16 0.50x — 0.55 catches a scale or dtype "
+                         "falling off the wire)")
     ap.add_argument("--max-exchange-growth", type=float, default=0.20,
                     help="allowed fractional exchange_bytes growth vs "
                          "baseline (0.20=20%%); the exact<=dense invariant "
@@ -282,6 +320,10 @@ def main() -> int:
     print("perf-gate: quality (tiled vs sequential, current run)")
     failures += check_quality(current, args.quality_delta,
                               args.quality_max_tile)
+    print("perf-gate: mixed precision (quantized exchange + quality, "
+          "current run)")
+    failures += check_mixed_precision(current, args.quality_delta,
+                                      args.max_mixed_exchange_ratio)
     print("perf-gate: exchange traffic (request-exact bytes)")
     failures += check_exchange(baseline, current, args.max_exchange_growth)
     print("perf-gate: resilience (chaos recovery, bit-exact + bounded)")

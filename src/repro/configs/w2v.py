@@ -44,6 +44,13 @@ class W2VConfig:
                                        # 0 -> smallest prefix covering
                                        # VOCAB_HOT_COVERAGE (~90%) of corpus
                                        # occurrences
+    tables: str = ""                   # table storage spec, e.g.
+                                       # "hot=bf16:frac=0.1,cold=int8" —
+                                       # parsed by kernels.tables.parse into
+                                       # the session TableSpec (DESIGN.md
+                                       # §11); "" -> f32 tables from the
+                                       # legacy vocab_shard/hot_vocab_frac
+                                       # knobs above
     seed: int = 0
 
     @property

@@ -5,27 +5,25 @@ parallelism, checkpoint/resume, metrics callbacks.
 linear LR schedule, the Hogwild mesh averaging of the paper's multi-GPU
 future-work, periodic checkpointing with resume (``train.checkpoint`` —
 atomic, reshard-on-load), and per-step metrics. The kernel itself is
-reached exclusively through the engine API (``kernels.ops.sgns_update`` /
-``kernels.registry``): the backend name is resolved once against the
-registry at construction, so invalid combinations fail fast with the fix
-spelled out rather than mid-epoch.
+reached exclusively through the engine API (``kernels.ops.step`` /
+``kernels.registry``): the session's :class:`TableSpec` (from
+``cfg.tables`` / the legacy knobs) is resolved once against the registry
+at construction, so invalid combinations — unknown backend, TPU-only
+backend off-TPU, storage dtypes the backend's kernels can't consume —
+fail fast with the fix spelled out rather than mid-epoch.
 
-Single-device steps dispatch through ``sgns_update`` directly. The
-multi-device path shards sentences over the ``data`` mesh axis under
-``shard_map``; each device runs the resolved backend on its shard against
-a local table replica (Hogwild — benign divergence) and replicas are
-averaged by ``pmean``. The window-tiled path (``cfg.tile_windows > 1``)
-composes with the mesh: the host tile schedule is built per sentence, so
-sharding the batch's plan arrays along ``data`` hands every device
-exactly the per-shard ``plan_tiles`` schedule, and the averaging is
-unchanged.
-
-With ``cfg.vocab_shard`` (DESIGN.md §8) the session additionally shards
-the *tables*: the Zipf-hot vocabulary head is replicated, the cold tail
-striped over ``data``, and each step exchanges only the distinct cold
-rows its shards touch (``distributed.vocab_placement`` plans the
-exchange host-side; ``ops.vocab_sharded_update`` runs it under
-``shard_map``).
+Every trained batch goes through ``ops.step(tables, step, cfg)``: the
+replicated single-device jit, the Hogwild data-parallel path (sentences
+shard over the ``data`` mesh axis, table replicas pmean-average), and the
+vocab-sharded path (DESIGN.md §8: replicated Zipf-hot head, cold tail
+striped over ``data``, request-exact cold-row exchange planned host-side
+by ``distributed.vocab_placement``) are all dispatch outcomes of the
+``Tables`` the session hands it. The window-tiled kernel family
+(``cfg.tile_windows > 1``) composes with every path. Mixed-precision
+storage (``cfg.tables`` — DESIGN.md §11) stores the hot head in bf16
+and/or the cold tail in bf16/int8 with per-row scales; the session
+attaches the per-batch rounding key so stochastic storage rounding stays
+bit-deterministic across worker counts and chaos recoveries.
 """
 from __future__ import annotations
 
@@ -41,8 +39,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.w2v import W2VConfig
 from repro.data.batching import Batch, BatchingPipeline
-from repro.kernels import ops, registry
+from repro.kernels import ops, quant, registry
+from repro.kernels import tables as tables_mod
 from repro.kernels.registry import StepInputs
+from repro.kernels.tables import Tables, TableSpec
 
 log = logging.getLogger("repro.trainer")
 
@@ -55,7 +55,9 @@ class TrainState:
     ``w_out``. Vocab-sharded sessions (``cfg.vocab_shard``) hold the
     replicated hot head there instead, plus the striped cold tail in
     ``cold_in`` / ``cold_out`` (``(cold_pad, d)``, rows over the ``data``
-    axis — DESIGN.md §8).
+    axis — DESIGN.md §8). Tables live in their *storage* dtypes
+    (``TableSpec``): int8 cold tails carry per-row f32 scales in
+    ``scale_in`` / ``scale_out``, row-sharded exactly like the cold rows.
     """
     w_in: jax.Array
     w_out: jax.Array
@@ -65,12 +67,19 @@ class TrainState:
     epoch_batch: int = 0   # batches completed within the current epoch
     cold_in: Optional[jax.Array] = None    # vocab-sharded cold tail
     cold_out: Optional[jax.Array] = None
+    scale_in: Optional[jax.Array] = None   # int8 per-row scales (cold)
+    scale_out: Optional[jax.Array] = None
 
     def params(self) -> Dict[str, jax.Array]:
-        """Checkpointable table pytree (split names when vocab-sharded)."""
+        """Checkpointable table pytree (split names when vocab-sharded;
+        int8 cold tails include their per-row scale leaves)."""
         if self.cold_in is not None:
-            return {"hot_in": self.w_in, "hot_out": self.w_out,
-                    "cold_in": self.cold_in, "cold_out": self.cold_out}
+            out = {"hot_in": self.w_in, "hot_out": self.w_out,
+                   "cold_in": self.cold_in, "cold_out": self.cold_out}
+            if self.scale_in is not None:
+                out["scale_in"] = self.scale_in
+                out["scale_out"] = self.scale_out
+            return out
         return {"w_in": self.w_in, "w_out": self.w_out}
 
 
@@ -98,25 +107,40 @@ class StepMetrics:
 
 
 def init_state(vocab_size: int, cfg: W2VConfig, seed: int = 0,
-               placement=None, mesh: Optional[Mesh] = None) -> TrainState:
+               placement=None, mesh: Optional[Mesh] = None,
+               spec: Optional[TableSpec] = None) -> TrainState:
     """Mikolov init: w_in ~ U(-0.5/d, 0.5/d), w_out = 0.
 
     With a ``placement`` (vocab sharding), the *same* full-table init is
     drawn and then split hot/cold — so a sharded session starts from
     exactly the tables a replicated one would (the parity baseline), and
-    the cold tail is placed with rows over the ``data`` axis.
+    the cold tail is placed with rows over the ``data`` axis. Sub-f32
+    storage dtypes in ``spec`` encode the init round-to-nearest (the
+    deterministic seam — see ``kernels.quant``); ``w_out = 0`` is exact
+    in every storage dtype, so quantized sessions start from the same
+    zero output table.
     """
+    spec = spec or TableSpec(vocab_shard=placement is not None)
     key = jax.random.PRNGKey(seed)
     d = cfg.dim
     w_in = (jax.random.uniform(key, (vocab_size, d), jnp.float32) - 0.5) / d
     w_out = jnp.zeros((vocab_size, d), jnp.float32)
     if placement is None:
+        w_in, _ = quant.encode_nearest(w_in, spec.hot_dtype)
+        w_out, _ = quant.encode_nearest(w_out, spec.hot_dtype)
         return TrainState(w_in=w_in, w_out=w_out)
     hot_in, cold_in = placement.split(np.asarray(w_in))
     hot_out, cold_out = placement.split(np.asarray(w_out))
+    h_in, _ = quant.encode_nearest(jnp.asarray(hot_in), spec.hot_dtype)
+    h_out, _ = quant.encode_nearest(jnp.asarray(hot_out), spec.hot_dtype)
+    c_in, s_in = quant.encode_nearest(jnp.asarray(cold_in), spec.cold_dtype)
+    c_out, s_out = quant.encode_nearest(jnp.asarray(cold_out),
+                                        spec.cold_dtype)
     put = _cold_put(mesh, cold_in.shape[0])
-    return TrainState(w_in=jnp.asarray(hot_in), w_out=jnp.asarray(hot_out),
-                      cold_in=put(cold_in), cold_out=put(cold_out))
+    return TrainState(
+        w_in=h_in, w_out=h_out, cold_in=put(c_in), cold_out=put(c_out),
+        scale_in=None if s_in is None else put(s_in),
+        scale_out=None if s_out is None else put(s_out))
 
 
 def _cold_put(mesh: Optional[Mesh], cold_pad: int) -> Callable:
@@ -159,23 +183,33 @@ class TrainSession:
         ckpt_dir: Optional[str] = None,
         ckpt_every: int = 0,
         resume: bool = True,
-        exchange: str = "exact",
+        exchange: Optional[str] = None,
     ):
         self.pipeline = pipeline
         self.cfg = cfg
-        # vocab-shard exchange flavor: "exact" (request-exact all_to_all
+        # the storage spec: cfg.tables when set (dtypes, hot fraction,
+        # exchange flavor, sharding), else derived from the legacy
+        # vocab_shard/hot_vocab_frac knobs. The explicit `exchange`
+        # argument overrides the spec — "exact" (request-exact all_to_all
         # buckets, the default) or "dense" (the all_gather + psum_scatter
         # reference path the parity tests compare against)
-        self.exchange = exchange
+        spec = tables_mod.from_config(cfg)
+        if exchange is not None:
+            spec = dataclasses.replace(spec, exchange=exchange)
+        self.spec = spec
+        self.exchange = spec.exchange
         # resolve once against the registry: invalid backend/capability
         # combinations (unknown name, TPU-only backend off-TPU, plan
-        # mismatch) fail here, not mid-epoch. The *requested* name is kept
-        # for dispatch so batches without a plan (T=1) can still resolve
-        # their sequential variant
+        # mismatch, storage dtypes the kernels can't consume) fail here,
+        # not mid-epoch. The *requested* name is kept for dispatch so
+        # batches without a plan (T=1) can still resolve their sequential
+        # variant
         self._requested_backend = backend
-        self.backend = registry.resolve(backend, tiled=cfg.tile_windows > 1,
-                                        vocab_shard=cfg.vocab_shard).name
-        if cfg.vocab_shard and mesh is None:
+        self.backend = registry.resolve(
+            backend, tiled=cfg.tile_windows > 1,
+            vocab_shard=spec.vocab_shard,
+            dtypes=() if spec.master_copy else spec.dtypes).name
+        if spec.vocab_shard and mesh is None:
             # the sharded step runs under shard_map even for one device, so
             # the 1-shard path exercises the exact N-shard code
             mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
@@ -186,18 +220,19 @@ class TrainSession:
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.placement = None
-        if cfg.vocab_shard:
+        if spec.vocab_shard:
             from repro.distributed.vocab_placement import VocabPlacement
             self.placement = VocabPlacement.plan(
                 pipeline.vocab.counts, int(mesh.shape["data"]),
-                hot_frac=cfg.hot_vocab_frac)
+                hot_frac=spec.hot_frac)
             # hand the placement to the host pipeline so exchange plans are
             # computed in its finalize workers, off the step critical path
             # (Batch.exchange); _make_step falls back to inline planning
             # for pipelines (or batches) without one
             pipeline.placement = self.placement
         self.state = init_state(pipeline.vocab.size, cfg, cfg.seed,
-                                placement=self.placement, mesh=mesh)
+                                placement=self.placement, mesh=mesh,
+                                spec=spec)
         self.total_words = max(1, pipeline.epoch_words * cfg.epochs)
         self.words_per_sec = 0.0
         self.fetch_seconds = 0.0   # cumulative wait on the host pipeline
@@ -215,12 +250,6 @@ class TrainSession:
         if mesh is not None and not registry.get(self.backend).supports_mesh:
             raise ValueError(
                 f"backend {self.backend!r} does not support mesh sharding")
-        # data-parallel update fns, built lazily per tile size (a batch
-        # with a plan uses the tiled kernel family, one without the
-        # sequential family — both compose with the mesh); vocab-sharded
-        # updates additionally key on the batch's request width R
-        self._dp_updates: Dict[int, Callable] = {}
-        self._vs_updates: Dict[tuple, Callable] = {}
 
     # -- learning-rate schedule (classic linear decay) ----------------------
     def _lr_at(self, words_seen: int) -> float:
@@ -230,92 +259,37 @@ class TrainSession:
     def current_lr(self) -> float:
         return self._lr_at(self.state.words_seen)
 
-    # -- data-parallel Hogwild step ------------------------------------------
-    def _dp_update(self, tile: int) -> Callable:
-        """The sharded update for batches of tile size T (T=1: sequential
-        backend). Sentences — and, for T>1, the per-sentence rows of the
-        host tile schedule — shard over the ``data`` axis; each shard runs
-        the kernel locally and replicas are pmean-averaged (Hogwild)."""
-        fn = self._dp_updates.get(tile)
-        if fn is not None:
-            return fn
-        from jax.experimental.shard_map import shard_map
-
-        # T>1 resolves the tiled counterpart of the requested backend;
-        # T=1 batches (no plan) resolve its sequential variant even when
-        # cfg.tile_windows > 1 resolved a tiled name at construction
-        be = registry.resolve(self._requested_backend, tiled=tile > 1)
-        local = ops.traceable_update(be.name,
-                                     ops.static_for(self.cfg, tile))
-
-        def local_update(w_in, w_out, step: StepInputs):
-            new_in, new_out = local(w_in, w_out, step)
-            # Hogwild model averaging across the data axis
-            return (jax.lax.pmean(new_in, "data"),
-                    jax.lax.pmean(new_out, "data"))
-
-        plan_spec = P("data") if tile > 1 else None
-        step_specs = StepInputs(
-            tokens=P("data"), negs=P("data"), lengths=P("data"), lr=P(),
-            plan_uniq=plan_spec, plan_scatter=plan_spec,
-            plan_ucount=plan_spec, plan_strict=plan_spec)
-        sharded = shard_map(
-            local_update, mesh=self.mesh,
-            in_specs=(P(), P(), step_specs),
-            out_specs=(P(), P()),
-            check_rep=False,
-        )
-        fn = jax.jit(sharded, donate_argnums=(0, 1))
-        self._dp_updates[tile] = fn
-        return fn
-
-    # -- vocab-sharded step (hot replica + cold shard, DESIGN.md §8) ---------
-    def _vs_update(self, tile: int, width: int, cap: int) -> Callable:
-        """The vocab-sharded update for batches of tile size T, request
-        width R, and bucket capacity C. Sentences, tile-plan rows, and
-        per-shard request buckets shard over ``data``; the cold tables are
-        row-sharded; hot replicas are averaged like the replicated Hogwild
-        path."""
-        fn = self._vs_updates.get((tile, width, cap))
-        if fn is not None:
-            return fn
-        from jax.experimental.shard_map import shard_map
-
-        be = registry.resolve(self._requested_backend, tiled=tile > 1,
-                              vocab_shard=True)
-        local = ops.vocab_sharded_update(
-            be.name, ops.static_for(self.cfg, tile), self.placement,
-            exchange=self.exchange)
-
-        plan_spec = P("data") if tile > 1 else None
-        step_specs = StepInputs(
-            tokens=P("data"), negs=P("data"), lengths=P("data"), lr=P(),
-            plan_uniq=plan_spec, plan_scatter=plan_spec,
-            plan_ucount=plan_spec, plan_strict=plan_spec,
-            cold_ids=P("data"), bucket_ids=P("data"), bucket_pos=P("data"))
-        sharded = shard_map(
-            local, mesh=self.mesh,
-            in_specs=(P(), P(), P("data"), P("data"), step_specs),
-            out_specs=(P(), P(), P("data"), P("data")),
-            check_rep=False,
-        )
-        fn = jax.jit(sharded, donate_argnums=(0, 1, 2, 3))
-        self._vs_updates[(tile, width, cap)] = fn
-        return fn
+    def _tables(self) -> Tables:
+        """The state's tables as the ``ops.step`` pytree (spec/placement
+        ride as static metadata)."""
+        st = self.state
+        return Tables(w_in=st.w_in, w_out=st.w_out,
+                      cold_in=st.cold_in, cold_out=st.cold_out,
+                      scale_in=st.scale_in, scale_out=st.scale_out,
+                      spec=self.spec, placement=self.placement)
 
     def _make_step(self, batch: Batch, lr) -> StepInputs:
         """Device StepInputs for a batch: the vocab-sharded exchange plan
         when the session shards the vocabulary, the plain lift otherwise.
         Batches from a placement-aware pipeline arrive with the exchange
         plan already computed in the finalize workers (``batch.exchange``);
-        only placement-less batches pay for inline planning here."""
+        only placement-less batches pay for inline planning here. With
+        sub-f32 storage the step also carries the batch's rounding key —
+        a pure function of (seed, epoch, batch index), like the
+        subsample/negative draws, so stochastic storage rounding replays
+        bit-identically at any worker count."""
         if self.placement is not None:
             ex = getattr(batch, "exchange", None)
             if ex is None or ex.placement != self.placement:
                 from repro.distributed.vocab_placement import plan_exchange
                 ex = plan_exchange(batch, self.placement)
-            return ex.step_inputs(lr)
-        return batch.step_inputs(lr)
+            step = ex.step_inputs(lr)
+        else:
+            step = batch.step_inputs(lr)
+        if self.spec.is_mixed:
+            key = quant.round_key(self.cfg.seed, batch.epoch, batch.index)
+            step = dataclasses.replace(step, round_key=jnp.asarray(key))
+        return step
 
     # -- train ---------------------------------------------------------------
     def train_batch(self, batch: Batch,
@@ -343,21 +317,13 @@ class TrainSession:
             # sharded path needs the exchange plan, so rebuild from the
             # host batch rather than crash (or silently corrupt) below
             step = self._make_step(batch, lr)
-        if skipped:
-            pass
-        elif self.placement is not None:
+        if not skipped:
+            out = ops.step(self._tables(), step, self.cfg,
+                           backend=self._requested_backend, mesh=self.mesh)
             st = self.state
-            st.w_in, st.w_out, st.cold_in, st.cold_out = self._vs_update(
-                step.tile, step.cold_ids.shape[1],
-                step.bucket_ids.shape[-1])(
-                    st.w_in, st.w_out, st.cold_in, st.cold_out, step)
-        elif self.mesh is not None:
-            self.state.w_in, self.state.w_out = self._dp_update(step.tile)(
-                self.state.w_in, self.state.w_out, step)
-        else:
-            self.state.w_in, self.state.w_out = ops.sgns_update(
-                self.state.w_in, self.state.w_out, step, self.cfg,
-                backend=self._requested_backend)
+            st.w_in, st.w_out = out.w_in, out.w_out
+            st.cold_in, st.cold_out = out.cold_in, out.cold_out
+            st.scale_in, st.scale_out = out.scale_in, out.scale_out
         self.state.words_seen += batch.n_words
         self.state.batches_seen += 1
         self.state.epoch_batch += 1
@@ -501,7 +467,8 @@ class TrainSession:
             prefetch_workers=self.cfg.prefetch_workers)
         extra = {"words_seen": self.state.words_seen,
                  "batches_seen": self.state.batches_seen,
-                 "backend": self.backend, **cursor.to_extra()}
+                 "backend": self.backend, "tables": self.spec.to_extra(),
+                 **cursor.to_extra()}
         if self.placement is not None:
             extra["vocab_shard"] = self.placement.to_extra()
         return ckpt.save(
@@ -509,11 +476,15 @@ class TrainSession:
             extra=extra)
 
     def _restore_tables(self, step: int) -> Dict:
-        """Restore embedding tables across table formats: a split-table
-        (vocab-sharded) checkpoint restores into a replicated session and
-        vice versa, by reassembling the full tables through the writing
-        run's placement (recorded in the checkpoint extra) and re-splitting
-        with this session's. Same-format restores skip the round trip."""
+        """Restore embedding tables across table *formats*: split-table
+        (vocab-sharded) vs replicated, and any storage-dtype mix — a
+        mixed-precision checkpoint restores into an f32 session and vice
+        versa. Cross-format restores decode the writing run's storage to
+        the full f32 tables (through its placement and TableSpec, both
+        recorded in the checkpoint extra) and re-encode round-to-nearest
+        through this session's spec. Same-format restores (same leaf set,
+        shapes, dtypes, and placement) skip the round trip and keep the
+        exact storage bytes."""
         from repro.distributed.vocab_placement import VocabPlacement
         from repro.train import checkpoint as ckpt
         leaves, extra = ckpt.peek(self.ckpt_dir, step=step)
@@ -522,6 +493,7 @@ class TrainSession:
                     for k, v in self.state.params().items()}
         same_format = (set(leaves) == set(like_now) and all(
             tuple(leaves[k]["shape"]) == tuple(like_now[k].shape)
+            and leaves[k]["dtype"] == str(like_now[k].dtype)
             for k in like_now))
         if same_format and split_ckpt:
             # shapes alone can coincide across shard counts (equal
@@ -536,16 +508,28 @@ class TrainSession:
         else:
             like_ckpt = {
                 k: jax.ShapeDtypeStruct(tuple(m["shape"]),
-                                        np.dtype(m["dtype"]))
+                                        ckpt.np_dtype(m["dtype"]))
                 for k, m in leaves.items()}
             tree, extra = ckpt.restore(self.ckpt_dir, like_ckpt, step=step)
+            src_spec = TableSpec.from_extra(extra.get("tables", {}))
+
+            def dec_cold(name: str, sname: str) -> np.ndarray:
+                cold = np.asarray(tree[name]).astype(np.float32)
+                if src_spec.cold_dtype == "int8":
+                    cold = cold * np.asarray(tree[sname])[:, None]
+                return cold
+
             if split_ckpt:
                 src = VocabPlacement.from_extra(extra["vocab_shard"])
-                full_in = src.merge(tree["hot_in"], tree["cold_in"])
-                full_out = src.merge(tree["hot_out"], tree["cold_out"])
+                full_in = src.merge(
+                    np.asarray(tree["hot_in"]).astype(np.float32),
+                    dec_cold("cold_in", "scale_in"))
+                full_out = src.merge(
+                    np.asarray(tree["hot_out"]).astype(np.float32),
+                    dec_cold("cold_out", "scale_out"))
             else:
-                full_in = np.asarray(tree["w_in"])
-                full_out = np.asarray(tree["w_out"])
+                full_in = np.asarray(tree["w_in"]).astype(np.float32)
+                full_out = np.asarray(tree["w_out"]).astype(np.float32)
             # restoring through like_ckpt skipped restore()'s shape check
             # against *this* session — validate before training reads rows
             # out of range (jax clamps gathers: silent corruption)
@@ -561,18 +545,33 @@ class TrainSession:
             if self.placement is not None:
                 hot_in, cold_in = self.placement.split(full_in)
                 hot_out, cold_out = self.placement.split(full_out)
+                h_in, _ = quant.encode_nearest(jnp.asarray(hot_in),
+                                               self.spec.hot_dtype)
+                h_out, _ = quant.encode_nearest(jnp.asarray(hot_out),
+                                                self.spec.hot_dtype)
+                c_in, s_in = quant.encode_nearest(jnp.asarray(cold_in),
+                                                  self.spec.cold_dtype)
+                c_out, s_out = quant.encode_nearest(jnp.asarray(cold_out),
+                                                    self.spec.cold_dtype)
                 put = _cold_put(self.mesh, cold_in.shape[0])
-                tree = {"hot_in": jnp.asarray(hot_in),
-                        "hot_out": jnp.asarray(hot_out),
-                        "cold_in": put(cold_in), "cold_out": put(cold_out)}
+                tree = {"hot_in": h_in, "hot_out": h_out,
+                        "cold_in": put(c_in), "cold_out": put(c_out)}
+                if s_in is not None:
+                    tree["scale_in"] = put(s_in)
+                    tree["scale_out"] = put(s_out)
             else:
-                tree = {"w_in": jnp.asarray(full_in),
-                        "w_out": jnp.asarray(full_out)}
+                w_in, _ = quant.encode_nearest(jnp.asarray(full_in),
+                                               self.spec.hot_dtype)
+                w_out, _ = quant.encode_nearest(jnp.asarray(full_out),
+                                                self.spec.hot_dtype)
+                tree = {"w_in": w_in, "w_out": w_out}
         if self.placement is not None:
             self.state.w_in = tree["hot_in"]
             self.state.w_out = tree["hot_out"]
             self.state.cold_in = tree["cold_in"]
             self.state.cold_out = tree["cold_out"]
+            self.state.scale_in = tree.get("scale_in")
+            self.state.scale_out = tree.get("scale_out")
         else:
             self.state.w_in = tree["w_in"]
             self.state.w_out = tree["w_out"]
@@ -597,7 +596,7 @@ class TrainSession:
                 self.state = init_state(self.pipeline.vocab.size, self.cfg,
                                         self.cfg.seed,
                                         placement=self.placement,
-                                        mesh=self.mesh)
+                                        mesh=self.mesh, spec=self.spec)
                 self._resume_skip = 0
                 self.resumed_step = None
                 return None
@@ -624,18 +623,22 @@ class TrainSession:
 
     # -- inference helpers ----------------------------------------------------
     def embeddings(self) -> np.ndarray:
-        """The input embedding table ``(V, d)``; vocab-sharded sessions
-        reassemble it from the hot replica + cold shards. NOTE: for a
-        sharded session this gathers the full table onto one host —
-        fine for examples and tests, wrong for serving; the serve path
-        uses :meth:`embeddings_sharded` instead."""
+        """The input embedding table ``(V, d)`` as f32 (quantized storage
+        decodes once here); vocab-sharded sessions reassemble it from the
+        hot replica + cold shards. NOTE: for a sharded session this
+        gathers the full table onto one host — fine for examples and
+        tests, wrong for serving; the serve path uses
+        :meth:`embeddings_sharded` instead."""
         if self.placement is not None:
-            return self.placement.merge(np.asarray(self.state.w_in),
-                                        np.asarray(self.state.cold_in))
-        return np.asarray(self.state.w_in)
+            hot = np.asarray(self.state.w_in).astype(np.float32)
+            cold = np.asarray(quant.decode(self.state.cold_in,
+                                           self.state.scale_in,
+                                           self.spec.cold_dtype))
+            return self.placement.merge(hot, cold)
+        return np.asarray(self.state.w_in).astype(np.float32)
 
     def embeddings_sharded(self):
-        """Shard-aware view of the input table — no ``(V, d)`` gather.
+        """Shard-aware f32 view of the input table — no ``(V, d)`` gather.
 
         Returns ``(hot, cold, placement)``: for a vocab-sharded session,
         the replicated hot head ``(hot, d)``, the shard-major cold table
@@ -643,10 +646,16 @@ class TrainSession:
         sharding), and the :class:`VocabPlacement` describing the
         layout. For a replicated session, ``(w_in, None, None)`` — the
         caller chooses its own serving split
-        (:meth:`repro.serve.index.EmbeddingIndex.from_session`)."""
+        (:meth:`repro.serve.index.EmbeddingIndex.from_session`).
+        Quantized storage dequantizes here — once, at snapshot time —
+        so serving reads plain f32 rows (elementwise decode preserves
+        the cold table's device sharding)."""
         if self.placement is not None:
-            return self.state.w_in, self.state.cold_in, self.placement
-        return self.state.w_in, None, None
+            cold = quant.decode(self.state.cold_in, self.state.scale_in,
+                                self.spec.cold_dtype)
+            return (self.state.w_in.astype(jnp.float32), cold,
+                    self.placement)
+        return self.state.w_in.astype(jnp.float32), None, None
 
     def nearest(self, word_id: int, k: int = 5) -> np.ndarray:
         e = self.embeddings()

@@ -242,6 +242,13 @@ class Batch:
     # so request dedup + capacity bucketing run in the finalize workers,
     # off the training loop's critical path
     exchange: Optional[object] = None
+    # position of this batch in the keyed-randomness counter space: the
+    # same (epoch, index) pair that keyed its subsample/negative draws.
+    # Consumers that need more per-batch keyed randomness (the trainer's
+    # stochastic storage-rounding key) derive it from these counters so it
+    # replays identically at any worker count
+    epoch: int = 0
+    index: int = 0
 
     def step_inputs(self, lr) -> "StepInputs":
         """Lift this host batch into the engine API's device-side struct
@@ -308,7 +315,7 @@ def finalize_packed(packed: PackedBatch, cfg: W2VConfig,
     if cfg.tile_windows > 1:
         plan = plan_tiles(toks, negs, lens, cfg.tile_windows)
     batch = Batch(tokens=toks, negs=negs, lengths=lens, n_words=n_words,
-                  plan=plan)
+                  plan=plan, epoch=epoch, index=packed.index)
     if placement is not None:
         # local import: keeps this module free of distributed/ unless a
         # sharded session actually hands its placement to the pipeline

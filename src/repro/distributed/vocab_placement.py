@@ -140,7 +140,12 @@ class VocabPlacement:
     def split(self, full: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """``(V, d)`` table -> (hot replica ``(hot, d)``, shard-major cold
         table ``(cold_pad, d)``; rows ``[i*cps, (i+1)*cps)`` belong to shard
-        i). Padding rows are zero. Exact inverse of :meth:`merge`."""
+        i). Padding rows are zero. Exact inverse of :meth:`merge`.
+
+        Works on any trailing shape — including 1-D ``(V,)`` vectors, which
+        is how int8 per-row scales colocate with their cold shards: split
+        with the *same* row permutation as the cold rows themselves, so
+        ``scale[i]`` always lives on the shard serving ``cold[i]``."""
         full = np.asarray(full)
         if full.shape[0] != self.vocab_size:
             raise ValueError(f"table has {full.shape[0]} rows, placement "
@@ -238,28 +243,48 @@ class VocabExchange:
         all_to_all still moves; ``benchmarks/bench_memory.py`` tracks it."""
         return self.bucket_real / float(self.bucket_ids.size or 1)
 
-    def bytes_exchanged(self, dim: int, itemsize: int = 4) -> int:
+    @staticmethod
+    def row_bytes(dim: int, dtype: str = "float32") -> int:
+        """Wire bytes per exchanged row in storage dtype ``dtype``
+        (DESIGN.md §11): f32 ``4d``, bf16 ``2d``, int8 ``d + 4`` — the
+        quantized payload plus its per-row f32 scale, which travels in a
+        sibling ``all_to_all`` on the exact path."""
+        itemsize = {"float32": 4, "bfloat16": 2, "int8": 1}[dtype]
+        return dim * itemsize + (4 if dtype == "int8" else 0)
+
+    def bytes_exchanged(self, dim: int, itemsize: int = 4,
+                        dtype: Optional[str] = None) -> int:
         """Ideal per-step *payload* volume summed over the mesh: each
         distinct cold row crosses the interconnect twice per table (value
         gather + update write-back), for both ``w_in`` and ``w_out`` —
-        O(distinct rows), never O(V)."""
-        return sum(self.n_distinct) * dim * itemsize * 2 * 2
+        O(distinct rows), never O(V). ``dtype`` prices the rows in their
+        storage precision (overrides ``itemsize``)."""
+        row = self.row_bytes(dim, dtype) if dtype else dim * itemsize
+        return sum(self.n_distinct) * row * 2 * 2
 
     def bytes_device_dense(self, dim: int, itemsize: int = 4) -> int:
         """Per-device bytes the PR 5 *dense* exchange moved: all_gather +
         psum_scatter materialize every shard's full padded request list on
         every device — ``n · R`` rows per direction per table, an n-fold
-        constant over the payload (DESIGN.md §8)."""
+        constant over the payload (DESIGN.md §8). Always f32: the dense
+        reference path dequantizes *before* its collectives (psum_scatter
+        must sum in f32), so quantized storage buys it nothing on the
+        wire."""
         n = self.placement.n_shards
         return n * self.request_width * dim * itemsize * 2 * 2
 
-    def bytes_device_exact(self, dim: int, itemsize: int = 4) -> int:
+    def bytes_device_exact(self, dim: int, itemsize: int = 4,
+                           dtype: Optional[str] = None) -> int:
         """Per-device bytes of the request-exact bucketed ``all_to_all``:
         ``n · C ≈ R`` rows per direction per table (capacity padding is the
         only slack — bounded by ``bucket_occupancy``), so per-device
-        traffic is O(distinct · d) regardless of mesh size."""
+        traffic is O(distinct · d) regardless of mesh size. ``dtype``
+        prices the rows in their storage precision — the exact path moves
+        rows *quantized* (int8 payload + f32 scale, or bf16), which is
+        where the §11 2×/4× exchange-byte reduction lands."""
         n = self.placement.n_shards
-        return n * self.bucket_capacity * dim * itemsize * 2 * 2
+        row = self.row_bytes(dim, dtype) if dtype else dim * itemsize
+        return n * self.bucket_capacity * row * 2 * 2
 
     def step_inputs(self, lr) -> "Any":
         """Lift onto the device as a vocab-sharded ``StepInputs``."""

@@ -3,6 +3,7 @@
 Layout: ``fullw2v.py`` (Pallas TPU kernels) + ``ref.py`` (jnp oracles) +
 ``registry.py`` (engine API: backend descriptors, ``StepInputs``,
 resolution) + ``ops.py`` (backend registrations and the single public
-``sgns_update`` dispatch entry point). Import ``repro.kernels.ops`` to
+``step(tables, step, cfg, backend)`` dispatch entry point) +
+``tables.py``/``quant.py`` (``TableSpec`` storage dtypes, DESIGN.md §11). Import ``repro.kernels.ops`` to
 train; query ``repro.kernels.registry`` for the available backends.
 """

@@ -39,7 +39,7 @@ construction, and batch-level parallelism comes from data parallelism across
 cores/chips (Hogwild, as in the paper). The host entry points below are
 registered with the engine API (``kernels.registry``) as the ``pallas``,
 ``pallas_pipelined``, ``pallas_tiled``, and ``*_interpret`` backends;
-training code reaches them through ``kernels.ops.sgns_update``.
+training code reaches them through ``kernels.ops.step``.
 
 Embedding tables stay in HBM (``memory_space=ANY``); rows move via explicit
 ``make_async_copy`` — the TPU spelling of the paper's explicit caching.

@@ -1,0 +1,150 @@
+"""Quantized table storage primitives (DESIGN.md §11).
+
+FULL-W2V's thesis is bytes-per-update: every level of the paper's reuse
+hierarchy (registers → shared memory → HBM; VMEM → HBM → ICI here) wins by
+moving fewer bytes per touched row. Storage precision is one level deeper:
+``bfloat16`` halves and ``int8`` (per-row absmax scales) quarters the bytes
+per row — in HBM, in the §8 cold-row exchange, and in split checkpoints —
+while the update math stays f32 (Ji et al., PAPERS.md: SGNS quality
+tolerates reduced-precision *storage* when accumulation doesn't).
+
+Two rounding modes, used at different seams:
+
+* **Nearest** (deterministic) — initialization, checkpoint restore, and
+  the *transport* leg of the mixed exchange (requester→owner write-back).
+  Unbiased rounding buys nothing there because the value is re-rounded at
+  the storage seam anyway.
+* **Stochastic** (keyed) — the *storage* seam after each update. Rounding
+  to nearest every step would bias small updates (lr·grad below half an
+  ulp always rounds away); stochastic rounding keeps the expected table
+  equal to the f32 trajectory. Keys derive from the PR 4 counter
+  randomness — ``(seed, epoch, batch_index)`` through a domain-separation
+  tag — so every run, any worker count, and every chaos-recovery replay
+  draws the identical rounding noise: runs stay bit-deterministic and the
+  §9 digest checks keep passing.
+
+int8 rows carry a per-row f32 scale ``max|row| / 127``; the row's absmax
+element always encodes to exactly ±127 (``floor(127 + u) = 127`` for
+``u ∈ [0, 1)``), so decode→re-encode of an untouched row is a fixed point
+and quantized storage does not drift between touches.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# domain-separation tags, disjoint from data/batching.py's subsample
+# (0x5B5A) and negatives (0x4E45) tags
+_ROUND_TAG = 0x5254          # "RT" — round-to-storage key family
+TAG_HOT_IN, TAG_HOT_OUT = 0, 1
+TAG_COLD_IN, TAG_COLD_OUT = 2, 3
+TAG_FULL_IN, TAG_FULL_OUT = 4, 5     # master-copy / replicated full tables
+
+STORAGE_DTYPES = ("float32", "bfloat16", "int8")
+
+
+def round_key(seed: int, epoch: int, batch_index: int) -> np.ndarray:
+    """uint32[2] threefry key for one batch's storage rounding — a pure
+    function of the same counters that key subsampling and negatives, so
+    the rounding noise replays bit-identically across worker counts and
+    chaos recoveries."""
+    ss = np.random.SeedSequence([seed, _ROUND_TAG, epoch, batch_index])
+    return ss.generate_state(2, np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# bfloat16: truncate-with-random-carry stochastic rounding
+# ---------------------------------------------------------------------------
+
+def bf16_nearest(x: jax.Array) -> jax.Array:
+    """Round-to-nearest-even f32 → bf16 (init / restore / transport)."""
+    return x.astype(jnp.bfloat16)
+
+
+def bf16_stochastic(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Stochastically round f32 → bf16: add uniform noise to the 16 bits
+    about to be truncated, then truncate. P(round up) equals the truncated
+    fraction, so E[result] = x; values already representable in bf16 (all
+    low bits zero) are preserved exactly — no carry can reach bit 16."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    noise = jax.random.bits(key, x.shape, jnp.uint32) & jnp.uint32(0xFFFF)
+    hi = ((bits + noise) >> 16).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(hi, jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# int8 with per-row scales
+# ---------------------------------------------------------------------------
+
+def int8_scale(x: jax.Array) -> jax.Array:
+    """Per-row absmax scale ``max|row| / 127`` (all-zero rows get 1.0 so
+    decode stays a plain multiply)."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    return jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+
+
+def int8_nearest(x: jax.Array,
+                 scale: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic f32 → (int8, scale) encode, round-to-nearest."""
+    if scale is None:
+        scale = int8_scale(x)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_stochastic(x: jax.Array, key: jax.Array,
+                    scale: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Stochastic f32 → (int8, scale) encode: ``floor(x/scale + u)`` with
+    ``u ~ U[0, 1)`` rounds up with probability equal to the fractional
+    part — unbiased in expectation over keyed draws."""
+    if scale is None:
+        scale = int8_scale(x)
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    q = jnp.clip(jnp.floor(x / scale[..., None] + u), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_decode(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """(int8, per-row scale) → f32."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# dtype-generic storage codec (the seam ops.step and the trainer use)
+# ---------------------------------------------------------------------------
+
+def decode(payload: jax.Array, scale: Optional[jax.Array],
+           dtype: str) -> jax.Array:
+    """Storage → f32 working values."""
+    if dtype == "int8":
+        return int8_decode(payload, scale)
+    if dtype == "float32":
+        return payload
+    return payload.astype(jnp.float32)
+
+
+def encode_nearest(x: jax.Array, dtype: str
+                   ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """f32 → (payload, scale-or-None), deterministic nearest rounding."""
+    if dtype == "float32":
+        return x, None
+    if dtype == "bfloat16":
+        return bf16_nearest(x), None
+    return int8_nearest(x)
+
+
+def encode_stochastic(x: jax.Array, dtype: str, key: jax.Array,
+                      tag: int) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """f32 → (payload, scale-or-None), keyed stochastic rounding; ``tag``
+    domain-separates the tables sharing one batch key (TAG_*)."""
+    if dtype == "float32":
+        return x, None
+    k = jax.random.fold_in(key, tag)
+    if dtype == "bfloat16":
+        return bf16_stochastic(x, k), None
+    return int8_stochastic(x, k)

@@ -41,8 +41,12 @@ class StepInputs:
     when present, the token/negative/plan arrays are remapped into
     per-shard working-table space, ``bucket_*`` hold the per-owner
     capacity buckets the request-exact ``all_to_all`` exchange routes, and
-    the step must run under a mesh session (``ops.vocab_sharded_update``),
-    not plain ``sgns_update``."""
+    the step must run under a mesh session (a vocab-sharded ``ops.step``),
+    not a single-replica one. ``round_key`` carries the batch's keyed
+    stochastic-rounding key (``kernels.quant.round_key`` — a pure function
+    of ``(seed, epoch, batch_index)``) and is attached only when the
+    session's :class:`~repro.kernels.tables.TableSpec` stores a table
+    below f32."""
     tokens: jax.Array                       # (S, L) int32
     negs: jax.Array                         # (S, L, N) int32
     lengths: jax.Array                      # (S,) int32
@@ -54,6 +58,7 @@ class StepInputs:
     cold_ids: Optional[jax.Array] = None      # (n_shards, R) int32, -1 pad
     bucket_ids: Optional[jax.Array] = None    # (n, n, C) int32, -1 pad
     bucket_pos: Optional[jax.Array] = None    # (n, n, C) int32, R pad
+    round_key: Optional[jax.Array] = None     # (2,) uint32 threefry key
 
     @property
     def has_plan(self) -> bool:
@@ -96,7 +101,7 @@ jax.tree_util.register_dataclass(
     StepInputs,
     data_fields=["tokens", "negs", "lengths", "lr", "plan_uniq",
                  "plan_scatter", "plan_ucount", "plan_strict", "cold_ids",
-                 "bucket_ids", "bucket_pos"],
+                 "bucket_ids", "bucket_pos", "round_key"],
     meta_fields=[])
 
 
@@ -138,6 +143,12 @@ class KernelBackend:
     supports_tiling: bool = False     # has a window-tiled counterpart
     supports_vocab_shard: bool = False  # runs on the compact working table
                                         # of a vocab-sharded step (§8)
+    # storage dtypes the engine's step wrappers can feed this backend
+    # (tables.TableSpec dtypes): rows dequantize to f32 at the working-set
+    # boundary (VMEM on hardware), the update math is f32 everywhere.
+    # Backends missing a dtype still run it under the f32 master-copy
+    # fallback (TableSpec.master_copy) — resolve() spells that out.
+    supports_dtypes: Tuple[str, ...] = ("float32",)
     requires_tpu: bool = False        # compiles natively only on TPU
     tiled_variant: Optional[str] = None      # name of the tiled counterpart
     interpret_variant: Optional[str] = None  # interpret-mode escape hatch
@@ -195,6 +206,7 @@ def cli_choices() -> List[str]:
 
 
 def resolve(name: str, *, tiled: bool = False, vocab_shard: bool = False,
+            dtypes: Tuple[str, ...] = (),
             platform: Optional[str] = None) -> KernelBackend:
     """Resolve a backend name against the registry for this step shape.
 
@@ -210,6 +222,10 @@ def resolve(name: str, *, tiled: bool = False, vocab_shard: bool = False,
     * ``vocab_shard=True`` additionally requires the resolved backend to
       declare ``supports_vocab_shard`` (it will be handed a compact
       hot+gathered working table instead of the full ``(V, d)`` one).
+    * ``dtypes`` (a ``TableSpec.dtypes`` tuple) requires every requested
+      storage dtype in the resolved backend's ``supports_dtypes``.
+      Callers running the f32 master-copy fallback pass ``()`` — the
+      fallback feeds the backend plain f32 tables.
     * Invalid combinations (a plan-consuming backend without a plan, a
       TPU-only backend off-TPU, a vocab-shard-incapable backend on a
       sharded step, an unknown name) raise ``ValueError`` with the fix
@@ -254,6 +270,20 @@ def resolve(name: str, *, tiled: bool = False, vocab_shard: bool = False,
             f"(it would be handed a compact hot+gathered working table, "
             f"not the full (V, d) one); set cfg.vocab_shard=False or pick "
             f"one of: {capable}")
+    missing = [d for d in dtypes if d not in be.supports_dtypes]
+    if missing:
+        capable = ', '.join(
+            n for n in _REGISTRY
+            if all(d in _REGISTRY[n].supports_dtypes for d in dtypes)
+            and _REGISTRY[n].needs_plan == be.needs_plan) or "<none>"
+        raise ValueError(
+            f"backend {be.name!r} stores tables only in "
+            f"{', '.join(be.supports_dtypes)} but the TableSpec requests "
+            f"{', '.join(dtypes)}; pick a capable backend ({capable}) or "
+            f"set the f32 master-copy fallback (--tables ...,master=1 / "
+            f"TableSpec(master_copy=True)) — tables then dequantize to f32 "
+            f"around the unmodified step (correct, but no exchange-byte "
+            f"win)")
     if be.requires_tpu and platform != "tpu":
         hint = (f"use {be.interpret_variant!r} (interpret mode: identical "
                 f"semantics, correctness-only speed) or "

@@ -21,6 +21,16 @@ import numpy as np
 from repro.kernels import registry
 
 
+def _tables_shards(tables: str) -> int:
+    """The ``shards=N`` clause of a ``--tables`` spec, parsed textually so
+    :func:`main` can synthesize host devices *before* jax initializes its
+    backends (the full parse lives in ``kernels.tables``, which imports
+    jax)."""
+    import re
+    m = re.search(r"(?:^|,)\s*shards\s*=\s*(\d+)", tables or "")
+    return int(m.group(1)) if m else 0
+
+
 def run_w2v(args) -> int:
     import hashlib
 
@@ -42,7 +52,8 @@ def run_w2v(args) -> int:
                     prefetch_depth=args.prefetch_depth,
                     prefetch_mode=args.prefetch_mode,
                     vocab_shard=bool(args.vocab_shard),
-                    hot_vocab_frac=args.hot_vocab_frac)
+                    hot_vocab_frac=args.hot_vocab_frac,
+                    tables=args.tables)
     words_per_cluster = max(args.vocab // args.clusters, 1)
     corpus = synthetic_cluster_corpus(
         n_clusters=args.clusters, words_per_cluster=words_per_cluster,
@@ -57,18 +68,22 @@ def run_w2v(args) -> int:
     else:
         print("pipeline=sync")
     mesh = None
-    if args.vocab_shard > 1:
+    n_shards = max(args.vocab_shard, _tables_shards(args.tables))
+    if n_shards > 1:
         from repro.launch.mesh import make_host_mesh
-        if jax.device_count() < args.vocab_shard:
-            print(f"error: --vocab-shard {args.vocab_shard} needs "
-                  f"{args.vocab_shard} devices, have {jax.device_count()}",
-                  file=sys.stderr)
+        if jax.device_count() < n_shards:
+            print(f"error: {n_shards}-shard tables need {n_shards} "
+                  f"devices, have {jax.device_count()}", file=sys.stderr)
             return 2
         mesh = make_host_mesh(model=1)
     trainer = TrainSession(pipe, cfg, backend=args.backend, mesh=mesh,
                            ckpt_dir=args.ckpt_dir,
                            ckpt_every=args.ckpt_every)
     print(f"backend={trainer.backend}")
+    if trainer.spec.is_mixed:
+        s = trainer.spec
+        print(f"tables: hot={s.hot_dtype} cold={s.cold_dtype} "
+              f"master_copy={s.master_copy}")
     if trainer.placement is not None:
         p = trainer.placement
         print(f"vocab_shard: hot={p.hot} cold={p.cold} shards={p.n_shards} "
@@ -99,10 +114,16 @@ def run_w2v(args) -> int:
           f"({trainer.state.words_seen:,} words) "
           f"device_busy_frac={trainer.device_busy_frac:.3f}")
     # bit-exactness witness: identical configs must print identical digests
-    # regardless of prefetch_workers (CI's determinism smoke greps this)
+    # regardless of prefetch_workers (CI's determinism smoke greps this).
+    # Covers every table leaf — hot, cold, and int8 scales — so quantized
+    # storage (keyed stochastic rounding included) is held to the same
+    # bit-determinism bar as f32
     digest = hashlib.sha1()
-    digest.update(np.asarray(trainer.state.w_in).tobytes())
-    digest.update(np.asarray(trainer.state.w_out).tobytes())
+    st = trainer.state
+    for part in (st.w_in, st.w_out, st.cold_in, st.cold_out,
+                 st.scale_in, st.scale_out):
+        if part is not None:
+            digest.update(np.asarray(part).tobytes())
     print(f"final_digest={digest.hexdigest()}")
     inv = np.zeros(pipe.vocab.size, dtype=int)
     for w, i in pipe.vocab.ids.items():
@@ -180,6 +201,16 @@ def main() -> int:
                    help="replicated hot head as a fraction of V "
                         "(0: smallest prefix covering ~90%% of corpus "
                         "occurrences)")
+    w.add_argument("--tables", default="",
+                   help="table storage spec (DESIGN.md §11), e.g. "
+                        "'hot=bf16:frac=0.1,cold=int8,shards=4': per-table "
+                        "storage dtypes (f32/bf16 hot, f32/bf16/int8 cold "
+                        "with per-row scales), shard count, exchange "
+                        "flavor (exchange=exact|dense), and master=1 for "
+                        "the f32 master-copy fallback. Subsumes "
+                        "--vocab-shard/--hot-vocab-frac, which seed its "
+                        "defaults; unsupported backend×dtype combinations "
+                        "are rejected at resolve time")
     # choices come from the backend registry, so every registered kernel
     # variant — pipelined, tiled, interpret — is reachable from the CLI
     w.add_argument("--backend", default="auto",
@@ -223,14 +254,16 @@ def main() -> int:
     l.set_defaults(fn=run_lm)
 
     args = ap.parse_args()
-    if getattr(args, "vocab_shard", 0) > 1:
+    n_shards = max(getattr(args, "vocab_shard", 0),
+                   _tables_shards(getattr(args, "tables", "")))
+    if n_shards > 1:
         # synthesize the fake host devices the sharded run needs BEFORE
         # jax initializes its backends (first devices()/dispatch call);
         # import order alone has not initialized them yet
         import os
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "") +
-            f" --xla_force_host_platform_device_count={args.vocab_shard}")
+            f" --xla_force_host_platform_device_count={n_shards}")
     return args.fn(args)
 
 

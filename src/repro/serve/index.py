@@ -10,6 +10,10 @@ reassembly): a split checkpoint restores leaf-by-leaf into the serving
 layout, re-striping the cold table host-side when the serving shard
 count differs from the writing run's (a permutation of the cold rows,
 O(cold·d) — the full-table merge path is deliberately never taken).
+Storage dtypes come from the checkpoint *manifest*: quantized tables
+(DESIGN.md §11) restore and re-stripe in storage precision — int8 rows
+with their per-row scales riding the same permutation — and dequantize
+exactly once when the snapshot stages onto the device.
 
 Every index carries a placement — a 1-shard placement when serving on
 one device — so the query path (:mod:`repro.serve.query`) is always the
@@ -114,29 +118,46 @@ class EmbeddingIndex:
 
         def like(name):
             meta = leaves[name]
-            return jax.ShapeDtypeStruct(meta["shape"], np.dtype(meta["dtype"]))
+            # the manifest is the dtype authority: quantized (int8/bf16)
+            # checkpoints restore in their storage dtype, never assumed f32
+            return jax.ShapeDtypeStruct(meta["shape"],
+                                        ckpt.np_dtype(meta["dtype"]))
 
+        scale = None
         if "hot_in" in leaves:
             src = VocabPlacement.from_extra(extra["vocab_shard"])
-            tree, _ = ckpt.restore(
-                ckpt_dir, {"hot_in": like("hot_in"), "cold_in": like("cold_in")},
-                step=step)
-            hot = np.asarray(tree["hot_in"], np.float32)
-            cold = np.asarray(tree["cold_in"], np.float32)
+            names = ["hot_in", "cold_in"]
+            if "scale_in" in leaves:     # int8 cold tail: per-row scales
+                names.append("scale_in")
+            tree, _ = ckpt.restore(ckpt_dir, {n: like(n) for n in names},
+                                   step=step)
+            # keep the *storage* dtypes through the re-stripe — the
+            # destination buffer takes its dtype from the manifest, not
+            # from whatever a previously-loaded shard array happened to
+            # be. An int8 cold table re-stripes as int8, its scales
+            # following the same row permutation, and dequantizes once at
+            # the staging step below.
+            hot = np.asarray(tree["hot_in"])
+            cold = np.asarray(tree["cold_in"])
+            if "scale_in" in tree:
+                scale = np.asarray(tree["scale_in"])
             placement = src
             if n_serve != src.n_shards:
                 placement = VocabPlacement(vocab_size=src.vocab_size,
                                            hot=src.hot, n_shards=n_serve)
                 cold = _restripe(cold, src, placement)
+                if scale is not None:
+                    scale = _restripe(scale, src, placement)
         else:
             tree, _ = ckpt.restore(ckpt_dir, {"w_in": like("w_in")}, step=step)
-            full = np.asarray(tree["w_in"], np.float32)
+            full = np.asarray(tree["w_in"]).astype(np.float32)  # bf16 ckpts
             v = full.shape[0]
             placement = VocabPlacement(
                 vocab_size=v, hot=max(1, min(int(round(hot_frac * v)), v - 1)),
                 n_shards=n_serve)
             hot, cold = placement.split(full)
-        return cls._stage(placement, hot, cold, mesh, step=step, extra=extra)
+        return cls._stage(placement, hot, cold, mesh, step=step, extra=extra,
+                          scale=scale)
 
     @classmethod
     def from_session(cls, session,
@@ -161,17 +182,32 @@ class EmbeddingIndex:
     @classmethod
     def _stage(cls, placement: VocabPlacement, hot: np.ndarray,
                cold: np.ndarray, mesh: Mesh, step: Optional[int] = None,
-               extra: Optional[Dict] = None) -> "EmbeddingIndex":
+               extra: Optional[Dict] = None,
+               scale: Optional[np.ndarray] = None) -> "EmbeddingIndex":
         """Place + normalize the split tables on device (the staging half
         of a hot swap: the new snapshot is fully resident before the
-        serving pointer flips)."""
+        serving pointer flips). Quantized tables arrive in storage dtype
+        (int8 cold rows with their per-row ``scale``, or bf16) and
+        dequantize exactly once here — after the device transfer, so the
+        host→device copy moves the small quantized bytes, and elementwise
+        decode preserves the cold sharding."""
         from repro.distributed.sharding import vocab_shard_sharding
+        from repro.kernels import quant
 
         hot_dev = _normalize(jnp.asarray(hot, jnp.float32))
-        cold_dev = jnp.asarray(cold, jnp.float32)
-        if int(mesh.shape["data"]) > 1:
+        cold_dev = jnp.asarray(cold)
+        sharded = int(mesh.shape["data"]) > 1
+        if sharded:
             cold_dev = jax.device_put(
                 cold_dev, vocab_shard_sharding(mesh, cold.shape[0]))
+        if scale is not None:
+            scale_dev = jnp.asarray(scale)
+            if sharded:
+                scale_dev = jax.device_put(
+                    scale_dev, vocab_shard_sharding(mesh, cold.shape[0]))
+            cold_dev = quant.int8_decode(cold_dev, scale_dev)
+        elif cold_dev.dtype != jnp.float32:
+            cold_dev = cold_dev.astype(jnp.float32)
         cold_dev = _normalize(cold_dev)
         jax.block_until_ready((hot_dev, cold_dev))   # staged, not lazy
         return cls(placement=placement, hot=hot_dev, cold=cold_dev,

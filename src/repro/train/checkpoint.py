@@ -87,6 +87,18 @@ class PipelineCursor:
                    prefetch_workers=int(extra.get("prefetch_workers", 0)))
 
 
+def np_dtype(name: str) -> np.dtype:
+    """Resolve a manifest dtype string, including extended dtypes
+    (``bfloat16``) that plain numpy only knows once ``ml_dtypes`` is
+    registered (importing jax does that; this fallback covers tools that
+    read manifests without it)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []
@@ -208,11 +220,18 @@ def save(ckpt_dir: str, step: int, tree: Any,
     manifest = {"step": step, "extra": extra or {}, "leaves": []}
     for i, (path, leaf) in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        if arr.dtype.kind == "V":
+            # extended dtypes (bfloat16): np.load round-trips them as raw
+            # void fields, so store the bytes as a same-width uint view and
+            # keep the true dtype in the manifest; restore views back. The
+            # sha1 covers the raw bytes either way.
+            arr = arr.view(np.dtype(f"uint{arr.dtype.itemsize * 8}"))
         key = f"a{i}"
         arrays[key] = arr
         manifest["leaves"].append({
             "path": path, "key": key, "shape": list(arr.shape),
-            "dtype": str(arr.dtype),
+            "dtype": dtype_name,
             "sha1": hashlib.sha1(arr.tobytes()).hexdigest(),
         })
     with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
@@ -379,6 +398,13 @@ def _restore_step(ckpt_dir: str, step: int, tree_like: Any,
             raise ValueError(
                 f"shape mismatch for {path!r}: ckpt {arr.shape} vs "
                 f"model {like.shape}")
+        if str(arr.dtype) != meta["dtype"]:
+            # extended dtypes stored as uint views (or legacy raw-void
+            # loads): reinterpret to the manifest's true dtype before any
+            # value conversion
+            true_dt = np_dtype(meta["dtype"])
+            if true_dt.itemsize == arr.dtype.itemsize:
+                arr = arr.view(true_dt)
         arr = arr.astype(like.dtype)
         if shard_flat is not None and shard_flat[i] is not None:
             leaves.append(jax.device_put(arr, shard_flat[i]))

@@ -1,0 +1,441 @@
+"""Mixed-precision tables (DESIGN.md §11): quantization codecs, the
+``TableSpec`` surface, registry dtype gating, the unified ``ops.step``
+entry point (+ deprecated shims), bit-determinism of keyed stochastic
+rounding, and f32↔mixed checkpoint restores. Multi-shard restores run in
+subprocesses (jax locks the device count at init), exactly like
+``test_multidevice.py``."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.w2v import smoke
+from repro.data.batching import BatchingPipeline
+from repro.data.corpus import synthetic_cluster_corpus
+from repro.kernels import ops, quant
+from repro.kernels import tables as tables_mod
+from repro.kernels.registry import StepInputs, resolve
+from repro.kernels.tables import Tables, TableSpec
+
+
+# ---------------------------------------------------------------------------
+# Quantization codecs
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bound(rng):
+    """Nearest int8 encode/decode error is bounded by half an ulp of the
+    per-row scale — the §11 storage-precision contract."""
+    x = jnp.asarray(rng.normal(size=(64, 32)) * rng.uniform(
+        0.01, 10.0, size=(64, 1)), jnp.float32)   # wildly varying row scales
+    q, scale = quant.int8_nearest(x)
+    err = np.abs(np.asarray(quant.int8_decode(q, scale)) - np.asarray(x))
+    assert np.all(err <= np.asarray(scale)[:, None] * 0.5 + 1e-7)
+    # per-row scales: each row's bound tracks its own magnitude
+    np.testing.assert_allclose(
+        np.asarray(scale), np.abs(np.asarray(x)).max(axis=-1) / 127.0,
+        rtol=1e-6)
+
+
+def test_int8_untouched_row_is_fixed_point(rng):
+    """decode→re-encode of an untouched row must be the identity (the
+    absmax element encodes exactly ±127), so quantized rows don't drift
+    between touches."""
+    x = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    q, scale = quant.int8_nearest(x)
+    q2, scale2 = quant.int8_nearest(quant.int8_decode(q, scale))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(scale), np.asarray(scale2))
+
+
+def test_int8_all_zero_row_decodes_to_zero():
+    q, scale = quant.int8_nearest(jnp.zeros((3, 4), jnp.float32))
+    assert np.all(np.asarray(scale) == 1.0)      # no div-by-zero sentinel
+    np.testing.assert_array_equal(
+        np.asarray(quant.int8_decode(q, scale)), np.zeros((3, 4)))
+
+
+def test_int8_stochastic_unbiased_over_keyed_draws():
+    """E[decode(stochastic_encode(x))] = x: averaging many keyed draws of
+    one row converges to the f32 value (the property that keeps the mixed
+    table's expected trajectory on the f32 one)."""
+    x = jnp.asarray([[0.111, -0.037, 0.5, 0.93]], jnp.float32)
+    base = jnp.asarray(quant.round_key(0, 0, 0))
+    acc = np.zeros_like(np.asarray(x))
+    draws = 400
+    for i in range(draws):
+        q, s = quant.int8_stochastic(x, jax.random.fold_in(base, i))
+        acc += np.asarray(quant.int8_decode(q, s))
+    scale = float(np.abs(np.asarray(x)).max() / 127.0)
+    # mean error shrinks like scale/sqrt(12*draws); 4 sigma of slack
+    assert np.abs(acc / draws - np.asarray(x)).max() < 4 * scale / np.sqrt(
+        12 * draws) + 1e-7
+
+
+def test_bf16_stochastic_preserves_representable_values():
+    """Values already exact in bf16 (low 16 bits zero) round to themselves
+    under every key — no spurious carry."""
+    x = jnp.asarray([0.5, -1.25, 3.0, 0.0, -0.09375], jnp.float32)
+    for i in range(8):
+        k = jax.random.fold_in(jnp.asarray(quant.round_key(1, 2, 3)), i)
+        np.testing.assert_array_equal(
+            np.asarray(quant.bf16_stochastic(x, k), np.float32),
+            np.asarray(x))
+
+
+def test_bf16_stochastic_unbiased_over_keyed_draws():
+    x = jnp.asarray([[0.1001, -2.347, 7.77e-3]], jnp.float32)
+    base = jnp.asarray(quant.round_key(7, 0, 0))
+    acc = np.zeros((1, 3))
+    draws = 400
+    for i in range(draws):
+        acc += np.asarray(
+            quant.bf16_stochastic(x, jax.random.fold_in(base, i)),
+            np.float32)
+    ulp = np.abs(np.asarray(x)) * 2.0 ** -8    # bf16 ulp near x
+    assert np.all(np.abs(acc / draws - np.asarray(x))
+                  < 4 * ulp / np.sqrt(12 * draws) + 1e-9)
+
+
+def test_round_key_is_counter_pure():
+    """Same counters → same key; any counter change → different key (the
+    §9 replay property the chaos digests rely on)."""
+    k = quant.round_key(3, 1, 41)
+    np.testing.assert_array_equal(k, quant.round_key(3, 1, 41))
+    for other in [(4, 1, 41), (3, 2, 41), (3, 1, 42)]:
+        assert not np.array_equal(k, quant.round_key(*other))
+
+
+# ---------------------------------------------------------------------------
+# TableSpec surface
+# ---------------------------------------------------------------------------
+
+def test_tablespec_parse_full_grammar():
+    spec = tables_mod.parse("hot=bf16:frac=0.1,cold=int8,shards=4,"
+                            "exchange=dense,master=1")
+    assert spec == TableSpec(hot_dtype="bfloat16", cold_dtype="int8",
+                             hot_frac=0.1, vocab_shard=True,
+                             exchange="dense", master_copy=True, shards=4)
+    # aliases + defaults
+    spec = tables_mod.parse("hot=f32,cold=i8,shards=2")
+    assert spec.hot_dtype == "float32" and spec.cold_dtype == "int8"
+    assert spec.vocab_shard and spec.exchange == "exact"
+    assert not tables_mod.parse("").is_mixed
+
+
+@pytest.mark.parametrize("bad, match", [
+    ("hot=int8", "hot-table"),                  # int8 needs cold scales
+    ("hot=fp8", "hot-table"),
+    ("cold=int4,shards=2", "cold-table"),
+    ("cold=int8", "vocab_shard"),               # cold quant needs sharding?
+    ("exchange=sloppy", "exchange"),
+    ("frobnicate=1", "unknown"),
+    ("hot=bf16:width=2", "sub-option"),
+    ("justaword", "key=value"),
+])
+def test_tablespec_parse_rejects(bad, match):
+    if bad == "cold=int8":
+        # `cold=` implies vocab sharding in the grammar; the validation
+        # error only fires when the spec is constructed directly
+        with pytest.raises(ValueError, match=match):
+            TableSpec(cold_dtype="int8")
+    else:
+        with pytest.raises(ValueError, match=match):
+            tables_mod.parse(bad)
+
+
+def test_tablespec_extra_roundtrip():
+    spec = TableSpec(hot_dtype="bfloat16", cold_dtype="int8", hot_frac=0.2,
+                     vocab_shard=True, exchange="dense", master_copy=True)
+    assert TableSpec.from_extra(spec.to_extra()) == spec
+    assert TableSpec.from_extra({}) == TableSpec()   # legacy checkpoints
+
+
+def test_tablespec_derived_views():
+    mixed = TableSpec(hot_dtype="bfloat16", cold_dtype="int8",
+                      vocab_shard=True)
+    assert mixed.is_mixed and mixed.needs_scales
+    assert mixed.dtypes == ("bfloat16", "int8")
+    f32 = TableSpec(vocab_shard=True)
+    assert not f32.is_mixed and not f32.needs_scales
+    assert f32.dtypes == ("float32",)
+
+
+# ---------------------------------------------------------------------------
+# Registry capability gating
+# ---------------------------------------------------------------------------
+
+def test_registry_rejects_unsupported_dtype_with_guidance():
+    with pytest.raises(ValueError) as ei:
+        resolve("pallas", vocab_shard=True, dtypes=("float32", "int8"))
+    msg = str(ei.value)
+    assert "int8" in msg and "master" in msg   # names the escape hatch
+    assert "jnp" in msg                        # ...and a capable backend
+
+
+def test_registry_resolves_capable_backend_for_int8():
+    be = resolve("jnp", vocab_shard=True, dtypes=("float32", "int8"))
+    assert "int8" in be.supports_dtypes
+    # master_copy drops the dtype requirement entirely (f32 kernels run)
+    assert resolve("pallas_interpret", vocab_shard=True, dtypes=()).name \
+        == "pallas_interpret"
+
+
+# ---------------------------------------------------------------------------
+# ops.step + deprecated shims
+# ---------------------------------------------------------------------------
+
+def _toy_step(rng, vocab=50, d=8):
+    cfg = smoke(dim=d, sentences_per_batch=4, max_sentence_len=12)
+    from tests.conftest import make_distinct_negs
+    tokens = rng.integers(0, vocab, size=(4, 12)).astype(np.int32)
+    negs = make_distinct_negs(rng, tokens, vocab, cfg.negatives)
+    lengths = np.full((4,), 12, np.int32)
+    step = StepInputs(jnp.asarray(tokens), jnp.asarray(negs),
+                      jnp.asarray(lengths), jnp.float32(0.025))
+    w_in = jnp.asarray(rng.normal(size=(vocab, d)) * 0.1, jnp.float32)
+    w_out = jnp.asarray(rng.normal(size=(vocab, d)) * 0.1, jnp.float32)
+    return cfg, step, w_in, w_out
+
+
+def test_sgns_update_shim_warns_and_matches_step(rng):
+    cfg, step, w_in, w_out = _toy_step(rng)
+    # the jitted step donates the table buffers: give each call its own copy
+    out = ops.step(Tables(w_in=jnp.array(w_in), w_out=jnp.array(w_out)),
+                   step, cfg, backend="jnp")
+    with pytest.warns(DeprecationWarning, match="ops.step"):
+        wi, wo = ops.sgns_update(jnp.array(w_in), jnp.array(w_out), step,
+                                 cfg, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(wi), np.asarray(out.w_in))
+    np.testing.assert_array_equal(np.asarray(wo), np.asarray(out.w_out))
+
+
+def test_vocab_sharded_update_shim_warns(rng):
+    from repro.distributed.vocab_placement import VocabPlacement
+    from repro.kernels.ops import static_for
+    cfg, _, _, _ = _toy_step(rng)
+    pl = VocabPlacement(vocab_size=50, hot=10, n_shards=1)
+    with pytest.warns(DeprecationWarning, match="ops.step"):
+        run = ops.vocab_sharded_update("jnp", static_for(cfg, 1), pl)
+    assert callable(run)
+
+
+def test_step_mixed_requires_round_key(rng):
+    cfg, step, w_in, w_out = _toy_step(rng)
+    t = Tables(w_in=quant.bf16_nearest(w_in), w_out=quant.bf16_nearest(w_out),
+               spec=TableSpec(hot_dtype="bfloat16"))
+    with pytest.raises(ValueError, match="round_key"):
+        ops.step(t, step, cfg, backend="jnp")
+
+
+def test_step_bf16_replicated_tracks_f32(rng):
+    """One bf16 replicated step stays within bf16 rounding of the f32
+    step (decode → identical f32 math → stochastic store)."""
+    cfg, step, w_in, w_out = _toy_step(rng)
+    t = Tables(w_in=quant.bf16_nearest(w_in), w_out=quant.bf16_nearest(w_out),
+               spec=TableSpec(hot_dtype="bfloat16"))   # before donation
+    ref = ops.step(Tables(w_in=w_in, w_out=w_out), step, cfg, backend="jnp")
+    key = jnp.asarray(quant.round_key(0, 0, 0))
+    out = ops.step(t, dataclasses.replace(step, round_key=key), cfg,
+                   backend="jnp")
+    assert out.w_in.dtype == jnp.bfloat16
+    a = np.asarray(out.w_in, np.float32)
+    b = np.asarray(ref.w_in)
+    assert np.abs(a - b).max() < np.abs(b).max() * 2.0 ** -7  # ~2 bf16 ulps
+
+
+# ---------------------------------------------------------------------------
+# Training sessions: dtype plumbing + determinism
+# ---------------------------------------------------------------------------
+
+def _corpus():
+    return synthetic_cluster_corpus(n_clusters=6, words_per_cluster=12,
+                                    n_sentences=200, mean_len=12, seed=0)
+
+
+def _session(tables, corpus, vocab=None, **kw):
+    from repro.core.trainer import TrainSession
+    cfg = smoke(dim=16, sentences_per_batch=64, tables=tables)
+    pipe = BatchingPipeline(corpus, cfg, vocab=vocab)
+    return TrainSession(pipe, cfg, backend="jnp", **kw), pipe
+
+
+def test_mixed_session_state_dtypes():
+    s, _ = _session("hot=bf16:frac=0.25,cold=int8,shards=1", _corpus())
+    s.train(max_batches=2)
+    st = s.state
+    assert st.w_in.dtype == jnp.bfloat16 and st.w_out.dtype == jnp.bfloat16
+    assert st.cold_in.dtype == jnp.int8 and st.cold_out.dtype == jnp.int8
+    assert st.scale_in.dtype == jnp.float32
+    assert st.scale_in.shape == (s.placement.cold_pad,)
+    assert s.embeddings().dtype == np.float32     # decoded view
+
+
+def test_mixed_training_bit_deterministic_across_reruns():
+    """Two identical mixed runs produce bit-identical quantized tables —
+    the keyed stochastic rounding is replay-stable."""
+    runs = []
+    for _ in range(2):
+        s, _ = _session("hot=bf16:frac=0.25,cold=int8,shards=1", _corpus())
+        s.train(max_batches=3)
+        runs.append(s.state)
+    for leaf in ("w_in", "w_out", "cold_in", "cold_out", "scale_in",
+                 "scale_out"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(runs[0], leaf)),
+            np.asarray(getattr(runs[1], leaf)), err_msg=leaf)
+
+
+def test_mixed_training_deterministic_across_prefetch_workers():
+    """The §11 determinism smoke the CI job mirrors: async prefetch must
+    not move the keyed rounding draws (keys are counter-derived, not
+    order-derived)."""
+    from repro.core.trainer import TrainSession
+    from repro.data.prefetch import make_pipeline
+    corpus = _corpus()
+    states = []
+    for workers in (0, 2):
+        cfg = smoke(dim=16, sentences_per_batch=64,
+                    tables="hot=bf16:frac=0.25,cold=int8,shards=1",
+                    prefetch_workers=workers)
+        s = TrainSession(make_pipeline(corpus, cfg), cfg, backend="jnp")
+        s.train(max_batches=3)
+        states.append(s.state)
+    for leaf in ("w_in", "cold_in", "scale_in", "cold_out"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(states[0], leaf)),
+            np.asarray(getattr(states[1], leaf)), err_msg=leaf)
+
+
+def test_master_copy_fallback_trains_and_quantizes():
+    s, _ = _session("hot=bf16:frac=0.25,cold=int8,shards=1,master=1",
+                    _corpus())
+    s.train(max_batches=2)
+    assert s.state.cold_in.dtype == jnp.int8    # storage stays quantized
+    assert np.isfinite(s.embeddings()).all()
+
+
+# ---------------------------------------------------------------------------
+# f32 ↔ mixed checkpoint restores (1 shard in-process; 2/4 in subprocess)
+# ---------------------------------------------------------------------------
+
+MIXED = "hot=bf16:frac=0.25,cold=int8,shards={n}"
+F32 = "hot=f32,cold=f32,shards={n}"
+
+
+def test_checkpoint_mixed_roundtrip_same_format(tmp_path):
+    corpus = _corpus()
+    d = str(tmp_path / "ckpt")
+    s1, pipe = _session(MIXED.format(n=1), corpus, ckpt_dir=d, ckpt_every=2)
+    s1.train(max_batches=2)
+    s2, _ = _session(MIXED.format(n=1), corpus, vocab=pipe.vocab, ckpt_dir=d)
+    assert s2.resumed_step == 2
+    for leaf in ("w_in", "cold_in", "scale_in", "cold_out", "scale_out"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s1.state, leaf)),
+            np.asarray(getattr(s2.state, leaf)), err_msg=leaf)
+    s2.train(max_batches=1)
+    assert s2.state.batches_seen == 3
+
+
+def test_checkpoint_mixed_restores_into_f32_session(tmp_path):
+    """mixed → f32: dequantization is exact, so the restored f32 session
+    reproduces the mixed session's decoded embeddings bit-for-bit."""
+    corpus = _corpus()
+    d = str(tmp_path / "ckpt")
+    s1, pipe = _session(MIXED.format(n=1), corpus, ckpt_dir=d, ckpt_every=2)
+    s1.train(max_batches=2)
+    s2, _ = _session(F32.format(n=1), corpus, vocab=pipe.vocab, ckpt_dir=d)
+    assert s2.resumed_step == 2
+    assert s2.state.cold_in.dtype == jnp.float32
+    np.testing.assert_array_equal(s1.embeddings(), s2.embeddings())
+
+
+def test_checkpoint_f32_restores_into_mixed_session(tmp_path):
+    """f32 → mixed: nearest-rounding encode, so the restored tables land
+    within the per-row quantization bound of the f32 checkpoint."""
+    corpus = _corpus()
+    d = str(tmp_path / "ckpt")
+    s1, pipe = _session(F32.format(n=1), corpus, ckpt_dir=d, ckpt_every=2)
+    s1.train(max_batches=2)
+    s2, _ = _session(MIXED.format(n=1), corpus, vocab=pipe.vocab, ckpt_dir=d)
+    assert s2.resumed_step == 2
+    assert s2.state.cold_in.dtype == jnp.int8
+    a, b = s1.embeddings(), s2.embeddings()
+    amax = np.abs(a).max()
+    assert np.abs(a - b).max() <= amax / 254 + amax * 2.0 ** -9 + 1e-7
+    s2.train(max_batches=1)   # and keeps training in mixed precision
+    assert s2.state.batches_seen == 3
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_checkpoint_f32_mixed_cross_restore_sharded(subproc, n_shards):
+    """Both restore directions on a real N-shard mesh: mixed → f32 exact,
+    f32 → mixed within the nearest-encode bound."""
+    r = subproc("""
+        import numpy as np, jax, tempfile
+        N = %d
+        assert jax.device_count() == N
+        from repro.configs.w2v import smoke
+        from repro.data.corpus import synthetic_cluster_corpus
+        from repro.data.batching import BatchingPipeline
+        from repro.core.trainer import TrainSession
+        from repro.launch.mesh import make_host_mesh
+
+        corpus = synthetic_cluster_corpus(n_clusters=6, words_per_cluster=12,
+                                          n_sentences=200, mean_len=12,
+                                          seed=0)
+        mixed = "hot=bf16:frac=0.25,cold=int8,shards=%%d" %% N
+        f32 = "hot=f32,cold=f32,shards=%%d" %% N
+
+        def session(tables, vocab=None, **kw):
+            cfg = smoke(dim=16, sentences_per_batch=64, tables=tables)
+            pipe = BatchingPipeline(corpus, cfg, vocab=vocab)
+            return TrainSession(pipe, cfg, backend="jnp",
+                                mesh=make_host_mesh(model=1), **kw), pipe
+
+        # mixed -> f32 (exact: decode is a multiply)
+        d1 = tempfile.mkdtemp()
+        s1, pipe = session(mixed, ckpt_dir=d1, ckpt_every=2)
+        s1.train(max_batches=2)
+        assert str(s1.state.cold_in.dtype) == "int8"
+        s2, _ = session(f32, vocab=pipe.vocab, ckpt_dir=d1)
+        assert s2.resumed_step == 2
+        np.testing.assert_array_equal(s1.embeddings(), s2.embeddings())
+
+        # f32 -> mixed (nearest encode: bounded)
+        d2 = tempfile.mkdtemp()
+        s3, _ = session(f32, vocab=pipe.vocab, ckpt_dir=d2, ckpt_every=2)
+        s3.train(max_batches=2)
+        s4, _ = session(mixed, vocab=pipe.vocab, ckpt_dir=d2)
+        assert s4.resumed_step == 2
+        assert str(s4.state.cold_in.dtype) == "int8"
+        a, b = s3.embeddings(), s4.embeddings()
+        amax = np.abs(a).max()
+        assert np.abs(a - b).max() <= amax / 254 + amax * 2.0 ** -9 + 1e-7
+        s4.train(max_batches=1)
+        assert s4.state.batches_seen == 3
+        print("OK")
+    """ % n_shards, n_devices=n_shards)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+def test_serve_loads_quantized_checkpoint(tmp_path):
+    """serve/index reads storage dtypes from the manifest: an int8 split
+    checkpoint stages with the same normalized rows as the trainer's
+    decoded view, including a shard-count change (re-stripe in storage
+    precision, scales riding along)."""
+    from repro.serve.index import EmbeddingIndex
+    corpus = _corpus()
+    d = str(tmp_path / "ckpt")
+    s1, _ = _session(MIXED.format(n=1), corpus, ckpt_dir=d, ckpt_every=2)
+    s1.train(max_batches=2)
+    idx = EmbeddingIndex.load(d)
+    assert idx.vocab_size == s1.placement.vocab_size
+    hot, cold, _ = s1.embeddings_sharded()
+    want = np.array(hot, np.float32)
+    want /= np.maximum(np.linalg.norm(want, axis=-1, keepdims=True), 1e-12)
+    np.testing.assert_allclose(np.asarray(idx.hot), want, rtol=1e-6,
+                               atol=1e-7)
