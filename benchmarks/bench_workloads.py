@@ -1,0 +1,69 @@
+"""(this repo) DESIGN.md §12 workload frontends: per-frontend training
+throughput + embedding quality through the *full* session path (frontend
+build → pipeline attach → TrainSession), so a frontend regression —
+slower walk generation, a doc-row slow path in the kernels, bag-gather
+blowup — shows up in the same words/sec gate the plain W2V rows use.
+
+Rows (one per registered frontend, ``w2v`` first as the baseline):
+
+    workloads/<name>,us_per_batch,words_per_sec=... separation=...
+        nn_purity=... extra_rows=...
+
+``words_per_sec`` is gated by ``benchmarks.compare`` against the previous
+trajectory exactly like the throughput suite (new rows pass with a
+notice, so adding a frontend never breaks the bootstrap run).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import bench_cfg, fmt_row
+from repro import frontends
+from repro.core.quality import evaluate
+from repro.core.trainer import TrainSession
+from repro.data.batching import BatchingPipeline
+
+WARMUP_BATCHES = 1    # jit compile + first-batch staging
+TIMED_BATCHES = 8
+
+# per-frontend corpus knobs: small enough for CI, large enough that the
+# planted structure is recoverable (every corpus here carries cluster
+# ground truth, so the quality columns are comparable across frontends)
+KNOBS = dict(
+    vocab=512, clusters=16, sentences=1536, mean_len=20,       # w2v, subword
+    buckets=1024,                                              # subword
+    docs=48, sents_per_doc=24, words_per_cluster=32,           # doc2vec
+    communities=12, nodes_per=16, walks_per_node=4,            # node2vec
+    walk_length=32,
+)
+
+
+def run() -> List[str]:
+    rows = []
+    for name in frontends.names():
+        cfg = bench_cfg(dim=64, sentences_per_batch=64, max_sentence_len=32)
+        wl = frontends.get(name).build(cfg, **KNOBS)
+        pipe = BatchingPipeline(wl.corpus, wl.cfg)
+        wl.attach(pipe)
+        sess = TrainSession(pipe, wl.cfg, backend="jnp")
+        sess.train(max_batches=WARMUP_BATCHES)
+        w0 = sess.state.words_seen
+        t0 = time.perf_counter()
+        sess.train(max_batches=TIMED_BATCHES)
+        dt = time.perf_counter() - t0
+        words = sess.state.words_seen - w0
+        emb = sess.embeddings()[:pipe.vocab.size]
+        inv = np.zeros(pipe.vocab.size, dtype=int)
+        for w, i in pipe.vocab.ids.items():
+            inv[i] = wl.corpus.clusters[w]
+        m = evaluate(emb, inv, seed=1)
+        rows.append(fmt_row(
+            f"workloads/{name}", dt * 1e6 / TIMED_BATCHES,
+            f"words_per_sec={words / dt:.0f} "
+            f"separation={m['separation']:.3f} "
+            f"nn_purity={m['nn_purity']:.3f} "
+            f"extra_rows={pipe.extra_rows}"))
+    return rows

@@ -10,6 +10,7 @@
   bench_tile_sweep  — (this repo) DESIGN.md §4 window-tile sweep
   bench_resilience  — (this repo) DESIGN.md §9 chaos-schedule recovery
   bench_serve       — (this repo) DESIGN.md §10 serving QPS/p50/p99 + swap
+  bench_workloads   — (this repo) DESIGN.md §12 per-frontend words/sec + quality
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only <name>] [--out FILE]
 
@@ -59,7 +60,7 @@ def _parse_derived(derived: str) -> dict:
 # suite name -> module benchmarks.bench_<name>; single registry that both
 # --only's choices and the run loop derive from
 SUITE_NAMES = ("roofline", "memory", "batching", "throughput", "quality",
-               "tile_sweep", "lm_step", "resilience", "serve")
+               "tile_sweep", "lm_step", "resilience", "serve", "workloads")
 
 
 def _load_suites() -> dict:

@@ -208,7 +208,8 @@ class TrainSession:
         self.backend = registry.resolve(
             backend, tiled=cfg.tile_windows > 1,
             vocab_shard=spec.vocab_shard,
-            dtypes=() if spec.master_copy else spec.dtypes).name
+            dtypes=() if spec.master_copy else spec.dtypes,
+            frontends=getattr(pipeline, "frontend_features", ())).name
         if spec.vocab_shard and mesh is None:
             # the sharded step runs under shard_map even for one device, so
             # the 1-shard path exercises the exact N-shard code
@@ -220,17 +221,24 @@ class TrainSession:
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.placement = None
+        # the trainable table covers the vocabulary plus any frontend
+        # extras (doc rows, n-gram buckets — DESIGN.md §12); extras carry
+        # zero counts so placement planning stripes them into the cold tail
+        table_rows = getattr(pipeline, "table_rows", pipeline.vocab.size)
         if spec.vocab_shard:
             from repro.distributed.vocab_placement import VocabPlacement
+            counts = (pipeline.table_counts()
+                      if hasattr(pipeline, "table_counts")
+                      else pipeline.vocab.counts)
             self.placement = VocabPlacement.plan(
-                pipeline.vocab.counts, int(mesh.shape["data"]),
+                counts, int(mesh.shape["data"]),
                 hot_frac=spec.hot_frac)
             # hand the placement to the host pipeline so exchange plans are
             # computed in its finalize workers, off the step critical path
             # (Batch.exchange); _make_step falls back to inline planning
             # for pipelines (or batches) without one
             pipeline.placement = self.placement
-        self.state = init_state(pipeline.vocab.size, cfg, cfg.seed,
+        self.state = init_state(table_rows, cfg, cfg.seed,
                                 placement=self.placement, mesh=mesh,
                                 spec=spec)
         self.total_words = max(1, pipeline.epoch_words * cfg.epochs)
@@ -593,10 +601,11 @@ class TrainSession:
             if step is None:
                 log.warning("no usable checkpoint — re-initializing from "
                             "seed %d", self.cfg.seed)
-                self.state = init_state(self.pipeline.vocab.size, self.cfg,
-                                        self.cfg.seed,
-                                        placement=self.placement,
-                                        mesh=self.mesh, spec=self.spec)
+                self.state = init_state(
+                    getattr(self.pipeline, "table_rows",
+                            self.pipeline.vocab.size),
+                    self.cfg, self.cfg.seed, placement=self.placement,
+                    mesh=self.mesh, spec=self.spec)
                 self._resume_skip = 0
                 self.resumed_step = None
                 return None

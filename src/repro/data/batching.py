@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterator, List, Optional, Sequence
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -237,6 +237,13 @@ class Batch:
     lengths: np.ndarray   # (S,) int32
     n_words: int          # real (unpadded) words in the batch
     plan: Optional[TilePlan] = None   # set when cfg.tile_windows > 1
+    # frontend extras (DESIGN.md §12): per-sentence static context row
+    # (doc2vec — already mapped to table-extra space ``vocab.size + doc``,
+    # -1 for none) and per-position bag members (fastText subwords —
+    # (S, L, B) table rows, -1 padded; positions past the sentence length
+    # are all -1 so exchange request lists stay exact)
+    docs: Optional[np.ndarray] = None
+    bags: Optional[np.ndarray] = None
     # vocab-sharding exchange plan (distributed.vocab_placement
     # .VocabExchange), attached when the pipeline carries a placement —
     # so request dedup + capacity bucketing run in the finalize workers,
@@ -286,18 +293,21 @@ class PackedBatch:
     tokens: np.ndarray    # (rows, L) int32, rows <= S for the final batch
     lengths: np.ndarray   # (rows,) int32
     pad_rows: int         # rows to pad back up to S at finalize time
+    docs: Optional[np.ndarray] = None   # (rows,) int32 table rows, -1 none
 
 
 def finalize_packed(packed: PackedBatch, cfg: W2VConfig,
                     sampler: NegativeSampler, epoch: int,
-                    placement=None) -> Batch:
+                    placement=None, bag_table=None) -> Batch:
     """Stage 3: negatives + tile plan (+ vocab-sharding exchange plan when
-    ``placement`` is given) for one packed batch. Pure given ``(packed,
-    cfg, sampler table, epoch, placement)`` — the keyed rng means any
+    ``placement`` is given; + bag materialization when the pipeline carries
+    a ``bag_table``) for one packed batch. Pure given ``(packed, cfg,
+    sampler table, epoch, placement, bag_table)`` — the keyed rng means any
     worker, in any order, produces the identical Batch, and
     ``plan_exchange`` is rng-free, so the attached exchange inherits the
     same determinism."""
     toks, lens = packed.tokens, packed.lengths
+    docs = packed.docs
     rng = negatives_rng(cfg.seed, epoch, packed.index)
     if cfg.tile_windows > 1:
         # tile-shared negatives (Ji et al. HogBatch): one N-set per T
@@ -310,12 +320,22 @@ def finalize_packed(packed: PackedBatch, cfg: W2VConfig,
         toks = np.pad(toks, ((0, packed.pad_rows), (0, 0)))
         negs = np.pad(negs, ((0, packed.pad_rows), (0, 0), (0, 0)))
         lens = np.pad(lens, (0, packed.pad_rows))
+        if docs is not None:
+            docs = np.pad(docs, (0, packed.pad_rows), constant_values=-1)
     n_words = int(lens.sum())
     plan = None
     if cfg.tile_windows > 1:
         plan = plan_tiles(toks, negs, lens, cfg.tile_windows)
+    bags = None
+    if bag_table is not None:
+        # (S, L, B) member rows per token position; positions past the
+        # sentence length masked to -1 so sharded request lists only carry
+        # rows the kernel actually touches
+        pos = np.arange(toks.shape[1])[None, :] < lens[:, None]
+        bags = np.where(pos[..., None], bag_table[toks], -1).astype(np.int32)
     batch = Batch(tokens=toks, negs=negs, lengths=lens, n_words=n_words,
-                  plan=plan, epoch=epoch, index=packed.index)
+                  plan=plan, docs=docs, bags=bags,
+                  epoch=epoch, index=packed.index)
     if placement is not None:
         # local import: keeps this module free of distributed/ unless a
         # sharded session actually hands its placement to the pipeline
@@ -338,9 +358,33 @@ class BatchingPipeline:
         # VocabPlacement here so finalize plans the row exchange per batch
         # (None => batches carry no exchange and the trainer plans inline)
         self.placement = None
+        # frontend state (DESIGN.md §12), attached by a workload's
+        # prepare(): table rows past the vocabulary (doc rows / n-gram
+        # buckets, appended at [vocab.size, table_rows)), the per-word
+        # bag-membership table ((V, B) int32, -1 padded; member 0 is the
+        # word row itself), and the kernel features batches will carry
+        self.extra_rows = 0
+        self.bag_table: Optional[np.ndarray] = None
+        self.frontend_features: tuple = ()
         # epoch key when batches() is called without one: each call is the
         # next epoch, mirroring TrainSession's per-epoch iteration
         self._auto_epoch = 0
+
+    @property
+    def table_rows(self) -> int:
+        """Embedding-table rows the trainer must allocate: vocabulary plus
+        frontend extras (doc rows, n-gram buckets)."""
+        return self.vocab.size + self.extra_rows
+
+    def table_counts(self) -> np.ndarray:
+        """Occurrence counts over the full table. Frontend extras count
+        zero, so ``VocabPlacement.plan`` always stripes them into the
+        sharded cold tail and the negative sampler (built from the vocab's
+        unigram weights alone) can never draw them."""
+        if not self.extra_rows:
+            return self.vocab.counts
+        return np.concatenate(
+            [self.vocab.counts, np.zeros(self.extra_rows, np.int64)])
 
     def _resolve_epoch(self, epoch: Optional[int]) -> int:
         if epoch is None:
@@ -358,27 +402,48 @@ class BatchingPipeline:
             yield encode_block(self.vocab, sents[start:start + ENCODE_BLOCK],
                                self.cfg.subsample_t, rng)
 
-    def _encoded_stream(self, epoch: int) -> Iterator[List[int]]:
+    def _encoded_stream(self, epoch: int
+                        ) -> Iterator[Tuple[List[int], int]]:
+        """Yield ``(encoded_chunk, doc)`` pairs; ``doc`` is the raw
+        per-sentence document id, -1 when the corpus carries none."""
         cfg = self.cfg
+        doc_ids = getattr(self.corpus, "doc_ids", None)
+        n_seen = 0
         if cfg.ignore_delimiters:
             # stream-packing mode: concatenate the corpus and re-split into
             # max-length pseudo-sentences (paper §4.1)
             buf: List[int] = []
+            cur = -1
             for block in self._encoded_blocks(epoch):
                 for enc in block:
+                    doc = doc_ids[n_seen] if doc_ids is not None else -1
+                    n_seen += 1
+                    if doc_ids is not None and doc != cur and buf:
+                        # document boundary: flush the packing buffer. A
+                        # pseudo-sentence spliced across documents would
+                        # let windows near the join borrow context from
+                        # the neighbouring document — exactly what the
+                        # injected static doc row makes visible (and
+                        # wrong: one row, two documents)
+                        if len(buf) > 1:
+                            yield buf, cur
+                        buf = []
+                    cur = doc
                     buf.extend(enc)
                     while len(buf) >= cfg.max_sentence_len:
-                        yield buf[:cfg.max_sentence_len]
+                        yield buf[:cfg.max_sentence_len], cur
                         buf = buf[cfg.max_sentence_len:]
             if len(buf) > 1:
-                yield buf
+                yield buf, cur
         else:
             for block in self._encoded_blocks(epoch):
                 for enc in block:
+                    doc = doc_ids[n_seen] if doc_ids is not None else -1
+                    n_seen += 1
                     for i in range(0, len(enc), cfg.max_sentence_len):
                         chunk = enc[i:i + cfg.max_sentence_len]
                         if len(chunk) > 1:
-                            yield chunk
+                            yield chunk, doc
 
     # -- stage 2: pack into fixed-shape blocks ------------------------------
     def _packed(self, pad_len: Optional[int], epoch: int,
@@ -389,18 +454,22 @@ class BatchingPipeline:
         cfg = self.cfg
         L = pad_len or cfg.max_sentence_len
         S = cfg.sentences_per_batch
+        with_docs = getattr(self.corpus, "doc_ids", None) is not None
+        V = self.vocab.size
         toks = np.zeros((S, L), np.int32)
         lens = np.zeros((S,), np.int32)
+        docs = np.full((S,), -1, np.int32)
         row = 0
         index = 0
         stream = self._encoded_stream(epoch)
         while True:
             t0 = time.perf_counter()
-            sent = next(stream, None)
+            item = next(stream, None)
             if timed:   # encode+subsample time counts as batching work
                 self.stats.seconds += time.perf_counter() - t0
-            if sent is None:
+            if item is None:
                 break
+            sent, doc = item
             t0 = time.perf_counter()
             chunks = [sent[i:i + L] for i in range(0, len(sent), L)]
             for chunk in chunks:
@@ -408,20 +477,25 @@ class BatchingPipeline:
                     continue
                 toks[row, :len(chunk)] = chunk
                 lens[row] = len(chunk)
+                # doc rows live in table-extra space, past the vocabulary
+                docs[row] = V + doc if doc >= 0 else -1
                 row += 1
                 if row == S:
                     if timed:
                         self.stats.seconds += time.perf_counter() - t0
-                    yield PackedBatch(index, toks, lens, 0)
+                    yield PackedBatch(index, toks, lens, 0,
+                                      docs=docs if with_docs else None)
                     index += 1
                     toks = np.zeros((S, L), np.int32)
                     lens = np.zeros((S,), np.int32)
+                    docs = np.full((S,), -1, np.int32)
                     row = 0
                     t0 = time.perf_counter()
             if timed:
                 self.stats.seconds += time.perf_counter() - t0
         if row:
-            yield PackedBatch(index, toks[:row], lens[:row], S - row)
+            yield PackedBatch(index, toks[:row], lens[:row], S - row,
+                              docs=docs[:row] if with_docs else None)
 
     # -- batches ------------------------------------------------------------
     def batches(self, pad_len: Optional[int] = None,
@@ -443,7 +517,7 @@ class BatchingPipeline:
                 continue
             t0 = time.perf_counter()
             batch = finalize_packed(packed, self.cfg, self.sampler, epoch,
-                                    self.placement)
+                                    self.placement, self.bag_table)
             self.stats.seconds += time.perf_counter() - t0
             self.stats.words += batch.n_words
             yield batch

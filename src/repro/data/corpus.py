@@ -25,6 +25,19 @@ class Corpus:
     vocab_size: int
     # ground-truth cluster id per word (synthetic corpora only)
     clusters: Optional[np.ndarray] = None
+    # per-sentence document id (doc2vec frontend, DESIGN.md §12): when set,
+    # len(doc_ids) == len(sentences) and the batching pipeline threads each
+    # sentence's doc through to ``Batch.docs`` as an always-in-window static
+    # context row. Stream packing (ignore_delimiters) flushes at document
+    # boundaries so no pseudo-sentence spans two documents.
+    doc_ids: Optional[List[int]] = None
+
+    def __post_init__(self):
+        if (self.doc_ids is not None
+                and len(self.doc_ids) != len(self.sentences)):
+            raise ValueError(
+                f"doc_ids has {len(self.doc_ids)} entries for "
+                f"{len(self.sentences)} sentences")
 
     @property
     def n_words(self) -> int:

@@ -69,14 +69,16 @@ from repro.data.vocab import Vocab
 _WORKER_CFG: Optional[W2VConfig] = None
 _WORKER_SAMPLER: Optional[NegativeSampler] = None
 _WORKER_PLACEMENT = None
+_WORKER_BAGS = None
 
 
 def _proc_init(cfg: W2VConfig, sampler: NegativeSampler,
-               placement=None) -> None:
-    global _WORKER_CFG, _WORKER_SAMPLER, _WORKER_PLACEMENT
+               placement=None, bag_table=None) -> None:
+    global _WORKER_CFG, _WORKER_SAMPLER, _WORKER_PLACEMENT, _WORKER_BAGS
     _WORKER_CFG = cfg
     _WORKER_SAMPLER = sampler
     _WORKER_PLACEMENT = placement
+    _WORKER_BAGS = bag_table
 
 
 def _proc_ready() -> bool:
@@ -87,7 +89,7 @@ def _proc_ready() -> bool:
 
 def _proc_finalize(packed: PackedBatch, epoch: int) -> Batch:
     return finalize_packed(packed, _WORKER_CFG, _WORKER_SAMPLER, epoch,
-                           _WORKER_PLACEMENT)
+                           _WORKER_PLACEMENT, _WORKER_BAGS)
 
 
 @dataclasses.dataclass
@@ -166,7 +168,8 @@ class AsyncBatchingPipeline(BatchingPipeline):
             from concurrent.futures import ProcessPoolExecutor
             return ProcessPoolExecutor(
                 max_workers=self.workers, initializer=_proc_init,
-                initargs=(self.cfg, self.sampler, self.placement))
+                initargs=(self.cfg, self.sampler, self.placement,
+                          self.bag_table))
         from concurrent.futures import ThreadPoolExecutor
         return ThreadPoolExecutor(max_workers=self.workers,
                                   thread_name_prefix="w2v-finalize")
@@ -187,11 +190,8 @@ class AsyncBatchingPipeline(BatchingPipeline):
                 epoch: int) -> Future:
         if self.mode == "process":
             return ex.submit(_proc_finalize, packed, epoch)
-        if self.placement is not None:
-            return ex.submit(finalize_packed, packed, self.cfg,
-                             self.sampler, epoch, self.placement)
         return ex.submit(finalize_packed, packed, self.cfg, self.sampler,
-                         epoch)
+                         epoch, self.placement, self.bag_table)
 
     # -- pool healing --------------------------------------------------------
     def _heal_locked(self) -> None:

@@ -219,6 +219,11 @@ class VocabExchange:
     plan_scatter: Optional[np.ndarray] = None  # (unchanged)
     plan_ucount: Optional[np.ndarray] = None
     plan_strict: Optional[np.ndarray] = None
+    # frontend extras (DESIGN.md §12), remapped like tokens/negs with -1
+    # (no doc / bag pad) preserved. Extras occupy the zero-count table
+    # tail, so they are always cold rows and always ride the exchange.
+    docs: Optional[np.ndarray] = None          # (S,) static ctx rows
+    bags: Optional[np.ndarray] = None          # (S, L, B) member rows
 
     @property
     def request_width(self) -> int:
@@ -297,6 +302,10 @@ class VocabExchange:
                       plan_scatter=jnp.asarray(self.plan_scatter),
                       plan_ucount=jnp.asarray(self.plan_ucount),
                       plan_strict=jnp.asarray(self.plan_strict))
+        if self.docs is not None:
+            kw["static_ctx"] = jnp.asarray(self.docs)
+        if self.bags is not None:
+            kw["bags"] = jnp.asarray(self.bags)
         return StepInputs(tokens=jnp.asarray(self.tokens),
                           negs=jnp.asarray(self.negs),
                           lengths=jnp.asarray(self.lengths),
@@ -331,6 +340,10 @@ def plan_exchange(batch, placement: VocabPlacement) -> VocabExchange:
     negs = batch.negs.copy()
     plan = batch.plan
     uniq = plan.uniq.copy() if plan is not None else None
+    docs = getattr(batch, "docs", None)
+    docs = docs.copy() if docs is not None else None
+    bags = getattr(batch, "bags", None)
+    bags = bags.copy() if bags is not None else None
 
     lists: List[np.ndarray] = []
     for s in range(n):
@@ -338,7 +351,12 @@ def plan_exchange(batch, placement: VocabPlacement) -> VocabExchange:
         parts = [tokens[sl].ravel(), negs[sl].ravel()]
         if uniq is not None:
             parts.append(uniq[sl].ravel())
+        if docs is not None:
+            parts.append(docs[sl].ravel())
+        if bags is not None:
+            parts.append(bags[sl].ravel())
         flat = np.concatenate(parts)
+        # `>= hot` also drops the -1 pads docs/bags carry
         lists.append(first_seen_unique(flat[flat >= hot]).astype(np.int64))
 
     width = max(max((len(li) for li in lists), default=0), 1)
@@ -360,6 +378,10 @@ def plan_exchange(batch, placement: VocabPlacement) -> VocabExchange:
         negs[sl] = remap[negs[sl]]
         if uniq is not None:
             uniq[sl] = remap[uniq[sl]]
+        if docs is not None:
+            docs[sl] = _remap_masked(remap, docs[sl])
+        if bags is not None:
+            bags[sl] = _remap_masked(remap, bags[sl])
         remap[li] = 0   # restore for the next shard
 
     bucket_ids, bucket_pos = _plan_buckets(lists, placement, width)
@@ -371,7 +393,14 @@ def plan_exchange(batch, placement: VocabPlacement) -> VocabExchange:
     return VocabExchange(placement=placement, tokens=tokens, negs=negs,
                          lengths=batch.lengths, cold_ids=cold_ids,
                          n_distinct=[len(li) for li in lists],
-                         bucket_ids=bucket_ids, bucket_pos=bucket_pos, **kw)
+                         bucket_ids=bucket_ids, bucket_pos=bucket_pos,
+                         docs=docs, bags=bags, **kw)
+
+
+def _remap_masked(remap: np.ndarray, arr: np.ndarray) -> np.ndarray:
+    """Apply the working-table remap, preserving -1 sentinels (missing doc
+    row / bag padding) instead of reading ``remap[-1]``."""
+    return np.where(arr >= 0, remap[np.maximum(arr, 0)], -1)
 
 
 def _plan_buckets(lists: List[np.ndarray], placement: VocabPlacement,

@@ -1,0 +1,7 @@
+"""Workload frontends: corpus adapters + config presets over the W2V
+engine (DESIGN.md §12) — node2vec/DeepWalk random walks, PV-DM doc2vec,
+and fastText-style subword bags, all emitting the existing batch schema."""
+from repro.frontends.registry import (FrontendSpec, Workload, get, names,
+                                      register, specs)
+
+__all__ = ["FrontendSpec", "Workload", "get", "names", "register", "specs"]

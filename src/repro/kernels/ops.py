@@ -79,7 +79,8 @@ def _tiled_args(step: StepInputs, static: KernelStatic):
 
 
 def _update_jnp(w_in, w_out, step, static):
-    return _ref.batch_sgns_ref(w_in, w_out, *_seq_args(step), static.w_f)
+    return _ref.batch_sgns_ref(w_in, w_out, *_seq_args(step), static.w_f,
+                               static_ids=step.static_ctx, bags=step.bags)
 
 
 def _update_pallas(w_in, w_out, step, static):
@@ -99,7 +100,9 @@ def _update_pallas_interpret(w_in, w_out, step, static):
 def _update_jnp_tiled(w_in, w_out, step, static):
     return _ref.batch_sgns_tiled_ref(w_in, w_out,
                                      *_tiled_args(step, static),
-                                     gemm_windows=static.gemm_windows)
+                                     gemm_windows=static.gemm_windows,
+                                     static_ids=step.static_ctx,
+                                     bags=step.bags)
 
 
 def _update_pallas_tiled(w_in, w_out, step, static):
@@ -136,11 +139,17 @@ def _update_fused_pallas_tiled_interpret(hot_in, hot_out, got_in, got_out,
 _ALL_DTYPES = ("float32", "bfloat16", "int8")
 _NATIVE_DTYPES = ("float32", "bfloat16")
 
+# only the jnp oracles consume the workload-frontend StepInputs extensions
+# (DESIGN.md §12) so far; the Pallas kernels' DMA schedules don't route
+# bag members or the static doc row yet (ROADMAP)
+_FRONTENDS = ("static_ctx", "bags")
+
 register(KernelBackend(
     name="jnp", update=_update_jnp,
     description="compiled jnp oracle (kernels.ref.batch_sgns_ref)",
     supports_tiling=True, supports_vocab_shard=True,
     supports_dtypes=_ALL_DTYPES,
+    supports_frontends=_FRONTENDS,
     tiled_variant="jnp_tiled"))
 register(KernelBackend(
     name="pallas", update=_update_pallas,
@@ -168,7 +177,8 @@ register(KernelBackend(
     name="jnp_tiled", update=_update_jnp_tiled,
     description="window-tiled jnp oracle (kernels.ref.batch_sgns_tiled_ref)",
     needs_plan=True, supports_vocab_shard=True,
-    supports_dtypes=_ALL_DTYPES))
+    supports_dtypes=_ALL_DTYPES,
+    supports_frontends=_FRONTENDS))
 register(KernelBackend(
     name="pallas_tiled", update=_update_pallas_tiled,
     description="window-tiled Pallas kernel (TPU-native, DESIGN.md §4)",
@@ -237,7 +247,8 @@ def _jitted_mixed_update(name: str, static: KernelStatic, dtype: str):
 @functools.lru_cache(maxsize=None)
 def _jitted_dp_update(name: str, static: KernelStatic, dtype: str,
                       mesh: Mesh, axis_name: str, has_plan: bool,
-                      has_key: bool):
+                      has_key: bool, has_doc: bool = False,
+                      has_bags: bool = False):
     """The Hogwild data-parallel step: sentences (and tile-plan rows)
     shard over ``axis_name``, each shard updates a local replica, replicas
     pmean-average. Sub-f32 storage decodes before and stochastically
@@ -268,7 +279,9 @@ def _jitted_dp_update(name: str, static: KernelStatic, dtype: str,
         tokens=P(axis_name), negs=P(axis_name), lengths=P(axis_name), lr=P(),
         plan_uniq=plan_spec, plan_scatter=plan_spec,
         plan_ucount=plan_spec, plan_strict=plan_spec,
-        round_key=P() if has_key else None)
+        round_key=P() if has_key else None,
+        static_ctx=P(axis_name) if has_doc else None,
+        bags=P(axis_name) if has_bags else None)
     sharded = shard_map(
         local_update, mesh=mesh,
         in_specs=(P(), P(), step_specs),
@@ -280,7 +293,8 @@ def _jitted_dp_update(name: str, static: KernelStatic, dtype: str,
 
 @functools.lru_cache(maxsize=None)
 def _jitted_vs_update(name: str, static: KernelStatic, spec: TableSpec,
-                      placement, mesh: Mesh, axis_name: str):
+                      placement, mesh: Mesh, axis_name: str,
+                      has_doc: bool = False, has_bags: bool = False):
     """The vocab-sharded step under shard_map: hot replicas P(), cold
     tables (and int8 scales) row-sharded over ``axis_name``, the exchange
     plan sharded by requester."""
@@ -295,7 +309,9 @@ def _jitted_vs_update(name: str, static: KernelStatic, spec: TableSpec,
         plan_ucount=plan_spec, plan_strict=plan_spec,
         cold_ids=P(axis_name), bucket_ids=P(axis_name),
         bucket_pos=P(axis_name),
-        round_key=P() if spec.is_mixed else None)
+        round_key=P() if spec.is_mixed else None,
+        static_ctx=P(axis_name) if has_doc else None,
+        bags=P(axis_name) if has_bags else None)
     scale_spec = P(axis_name) if spec.needs_scales else None
     sharded = shard_map(
         run, mesh=mesh,
@@ -342,6 +358,8 @@ def step(tables: Tables, step: StepInputs, cfg: W2VConfig,
             "is None; attach quant.round_key(cfg.seed, epoch, batch_index) "
             "so stochastic rounding stays bit-deterministic")
     dtypes = () if spec.master_copy else spec.dtypes
+    frontends = ((("static_ctx",) if step.has_static_ctx else ())
+                 + (("bags",) if step.has_bags else ()))
     if tables.placement is not None:
         if not step.has_vocab_shard:
             raise ValueError(
@@ -353,9 +371,11 @@ def step(tables: Tables, step: StepInputs, cfg: W2VConfig,
                 "vocab-sharded Tables run under shard_map; pass the "
                 "session mesh (a 1-device Mesh works for one shard)")
         be = registry.resolve(backend, tiled=step.has_plan,
-                              vocab_shard=True, dtypes=dtypes)
+                              vocab_shard=True, dtypes=dtypes,
+                              frontends=frontends)
         fn = _jitted_vs_update(be.name, static_for(cfg, step.tile), spec,
-                               tables.placement, mesh, axis_name)
+                               tables.placement, mesh, axis_name,
+                               step.has_static_ctx, step.has_bags)
         w_in, w_out, cold_in, cold_out, scale_in, scale_out = fn(
             tables.w_in, tables.w_out, tables.cold_in, tables.cold_out,
             tables.scale_in, tables.scale_out, step)
@@ -368,12 +388,14 @@ def step(tables: Tables, step: StepInputs, cfg: W2VConfig,
             "this is the single-replica entry point. Run the step "
             "through a mesh TrainSession with cfg.vocab_shard=True, or "
             "build the step without plan_exchange.")
-    be = registry.resolve(backend, tiled=step.has_plan, dtypes=dtypes)
+    be = registry.resolve(backend, tiled=step.has_plan, dtypes=dtypes,
+                          frontends=frontends)
     static = static_for(cfg, step.tile)
     if mesh is not None:
         fn = _jitted_dp_update(be.name, static, spec.hot_dtype, mesh,
                                axis_name, step.has_plan,
-                               step.round_key is not None)
+                               step.round_key is not None,
+                               step.has_static_ctx, step.has_bags)
         w_in, w_out = fn(tables.w_in, tables.w_out, step)
     elif spec.hot_dtype == "float32":
         w_in, w_out = _jitted_update(be.name, static)(

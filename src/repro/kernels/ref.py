@@ -35,6 +35,30 @@ import jax.numpy as jnp
 from repro.core.sgns import stable_sigmoid, window_delta
 
 
+def _position_row(t_c, tokens, bags, w_in):
+    """Input-side row for position ``t_c``: the token's embedding, or — for
+    subword workloads — the masked sum over the position's bag members
+    (word row + hashed n-gram bucket rows, -1 padded)."""
+    if bags is None:
+        return w_in[tokens[t_c]]
+    V = w_in.shape[0]
+    mem = bags[t_c]                                      # (B,)
+    ok = mem >= 0
+    rows = w_in[jnp.clip(mem, 0, V - 1)]                 # (B, d)
+    return jnp.where(ok[:, None], rows, 0.0).sum(0)
+
+
+def _bag_scatter(w_in, bags, t_c, do_store, delta):
+    """Delta store for a bag position: every valid member receives the full
+    accumulated gradient (fastText sum-gradient; duplicate members — n-gram
+    hash collisions within one word — accumulate, matching the bag sum)."""
+    V = w_in.shape[0]
+    mem = bags[t_c]                                      # (B,)
+    ok = (mem >= 0) & do_store
+    mem_c = jnp.clip(mem, 0, V - 1)
+    return w_in.at[mem_c].add(jnp.where(ok[:, None], delta[None, :], 0.0))
+
+
 @functools.partial(jax.jit, static_argnames=("w_f",), donate_argnums=(0, 1))
 def sentence_sgns_ref(
     w_in: jax.Array,      # (V, d) f32 input embeddings
@@ -44,11 +68,19 @@ def sentence_sgns_ref(
     length: jax.Array,    # scalar int32 — actual sentence length
     lr: jax.Array,        # scalar f32
     w_f: int,
+    static_id=None,       # scalar int32 table row (-1 = none): doc2vec row
+    bags=None,            # (L, B) int32 member rows, -1 padded: subword bags
 ) -> Tuple[jax.Array, jax.Array]:
     """One sentence of the sequential FULL-W2V schedule: ring-buffer
     context reuse (§3.2) + shared-negative window GEMMs (§3.1), exactly as
     the module docstring lays out. The oracle the Pallas kernels are
-    tested against."""
+    tested against.
+
+    Frontend extensions (DESIGN.md §12): ``static_id`` appends an
+    always-in-window extra context row (PV-DM document vector, loaded once
+    per sentence, written back once); ``bags`` replaces every position's
+    input row with a masked bag sum and turns the ring's write-backs into
+    delta scatter-adds over the bag members (via a ``buf0`` load mirror)."""
     L, N = negs.shape
     V, d = w_in.shape
     r = 2 * w_f + 1
@@ -56,20 +88,34 @@ def sentence_sgns_ref(
                         dtype=jnp.int32)                      # (K,)
 
     buf = jnp.zeros((r, d), w_in.dtype)
+    # load-time mirror: bag stores write back buf - buf0 (the accumulated
+    # gradient) to every member instead of overwriting a single row
+    buf0 = jnp.zeros((r, d), w_in.dtype) if bags is not None else None
+
+    has_doc = (static_id >= 0) if static_id is not None else None
+    sid_c = jnp.clip(static_id, 0, V - 1) if static_id is not None else None
+    doc0 = (jnp.where(has_doc, w_in[sid_c], 0.0)
+            if static_id is not None else None)
+    doc_val = doc0
 
     # --- preload positions 0..w_f-1 ---
     def preload(q, carry):
-        w_in, buf = carry
+        w_in, buf, buf0 = carry
         valid = q < length
-        tok = tokens[jnp.clip(q, 0, L - 1)]
-        row = jnp.where(valid, w_in[tok], buf[q % r])
+        q_c = jnp.clip(q, 0, L - 1)
+        row = jnp.where(valid, _position_row(q_c, tokens, bags, w_in),
+                        buf[q % r])
         buf = buf.at[q % r].set(row)
-        return (w_in, buf)
+        if bags is not None:
+            # mirror only real loads: a clipped q aliases a live slot
+            buf0 = buf0.at[q % r].set(jnp.where(valid, row, buf0[q % r]))
+        return (w_in, buf, buf0)
 
-    w_in, buf = jax.lax.fori_loop(0, min(w_f, L), preload, (w_in, buf))
+    w_in, buf, buf0 = jax.lax.fori_loop(0, min(w_f, L), preload,
+                                        (w_in, buf, buf0))
 
     def step(t, carry):
-        w_in, w_out, buf = carry
+        w_in, w_out, buf, buf0, doc_val = carry
         active = t < length
 
         # --- evict + load leading edge q = t + w_f ---
@@ -78,13 +124,22 @@ def sentence_sgns_ref(
         old = q - r
         do_store = do_load & (old >= 0)
         old_c = jnp.clip(old, 0, L - 1)
-        store_idx = tokens[old_c]
-        store_val = jnp.where(do_store, buf[old_c % r], w_in[store_idx])
-        w_in = w_in.at[store_idx].set(store_val)
+        if bags is None:
+            store_idx = tokens[old_c]
+            store_val = jnp.where(do_store, buf[old_c % r], w_in[store_idx])
+            w_in = w_in.at[store_idx].set(store_val)
+        else:
+            slot = old_c % r
+            delta = jnp.where(do_store, buf[slot] - buf0[slot], 0.0)
+            w_in = _bag_scatter(w_in, bags, old_c, do_store, delta)
 
         q_c = jnp.clip(q, 0, L - 1)
-        load_row = jnp.where(do_load, w_in[tokens[q_c]], buf[q_c % r])
+        load_row = jnp.where(do_load, _position_row(q_c, tokens, bags, w_in),
+                             buf[q_c % r])
         buf = buf.at[q_c % r].set(load_row)
+        if bags is not None:
+            buf0 = buf0.at[q_c % r].set(
+                jnp.where(do_load, load_row, buf0[q_c % r]))
 
         # --- window t ---
         p = t + offsets                                       # (K,)
@@ -93,25 +148,40 @@ def sentence_sgns_ref(
         ctx = buf[slots]                                      # (K, d)
         out_idx = jnp.concatenate([tokens[t][None], negs[t]]) # (N+1,)
         out_rows = w_out[out_idx]
+        if static_id is not None:
+            # doc row rides as a (K+1)-th context row in every window
+            ctx = jnp.concatenate([ctx, doc_val[None]], axis=0)
+            mask = jnp.concatenate([mask, (active & has_doc)[None]])
         d_ctx, d_out = window_delta(ctx, out_rows, mask, lr)
+        if static_id is not None:
+            doc_val = doc_val + d_ctx[-1]
+            d_ctx = d_ctx[:-1]
         buf = buf.at[slots].add(d_ctx)        # masked rows contribute zeros
         w_out = w_out.at[out_idx].add(jnp.where(active, d_out, 0.0))
-        return (w_in, w_out, buf)
+        return (w_in, w_out, buf, buf0, doc_val)
 
-    w_in, w_out, buf = jax.lax.fori_loop(0, L, step, (w_in, w_out, buf))
+    w_in, w_out, buf, buf0, doc_val = jax.lax.fori_loop(
+        0, L, step, (w_in, w_out, buf, buf0, doc_val))
 
     # --- flush surviving positions length-r .. length-1 (increasing) ---
     def flush(k, carry):
-        w_in, buf = carry
+        w_in, buf, buf0 = carry
         p = length - r + k
         valid = p >= 0
         p_c = jnp.clip(p, 0, L - 1)
-        idx = tokens[p_c]
-        val = jnp.where(valid, buf[jnp.mod(p_c, r)], w_in[idx])
-        w_in = w_in.at[idx].set(val)
-        return (w_in, buf)
+        if bags is None:
+            idx = tokens[p_c]
+            val = jnp.where(valid, buf[jnp.mod(p_c, r)], w_in[idx])
+            w_in = w_in.at[idx].set(val)
+        else:
+            slot = jnp.mod(p_c, r)
+            delta = jnp.where(valid, buf[slot] - buf0[slot], 0.0)
+            w_in = _bag_scatter(w_in, bags, p_c, valid, delta)
+        return (w_in, buf, buf0)
 
-    w_in, buf = jax.lax.fori_loop(0, r, flush, (w_in, buf))
+    w_in, buf, buf0 = jax.lax.fori_loop(0, r, flush, (w_in, buf, buf0))
+    if static_id is not None:
+        w_in = w_in.at[sid_c].add(jnp.where(has_doc, doc_val - doc0, 0.0))
     return w_in, w_out
 
 
@@ -124,18 +194,22 @@ def batch_sgns_ref(
     lengths: jax.Array,   # (S,)
     lr: jax.Array,        # scalar
     w_f: int,
+    static_ids=None,      # (S,) int32 doc rows per sentence, -1 = none
+    bags=None,            # (S, L, B) int32 bag members, -1 padded
 ) -> Tuple[jax.Array, jax.Array]:
     """Sequential (deterministic) pass over a batch of sentences — the same
     order the Pallas grid uses."""
 
     def body(carry, xs):
         w_in, w_out = carry
-        toks, ngs, ln = xs
-        w_in, w_out = sentence_sgns_ref(w_in, w_out, toks, ngs, ln, lr, w_f)
+        toks, ngs, ln, sid, bg = xs
+        w_in, w_out = sentence_sgns_ref(w_in, w_out, toks, ngs, ln, lr, w_f,
+                                        static_id=sid, bags=bg)
         return (w_in, w_out), None
 
     (w_in, w_out), _ = jax.lax.scan(body, (w_in, w_out),
-                                    (tokens, negs, lengths))
+                                    (tokens, negs, lengths, static_ids,
+                                     bags))
     return w_in, w_out
 
 
@@ -145,9 +219,11 @@ def batch_sgns_ref(
 
 def _sentence_sgns_tiled(w_in, w_out, tokens, negs, length, lr,
                          uniq, scatter, ucount, strict,
-                         *, w_f: int, tile: int, gemm_windows: int):
+                         *, w_f: int, tile: int, gemm_windows: int,
+                         static_id=None, bags=None):
     """One sentence of the tiled schedule. Shapes: tokens (L,), negs (L, N),
-    uniq/scatter (nt, T*(N+1)), ucount/strict (nt,)."""
+    uniq/scatter (nt, T*(N+1)), ucount/strict (nt,). ``static_id``/``bags``
+    mirror `sentence_sgns_ref`'s frontend extensions (DESIGN.md §12)."""
     G = gemm_windows
     L, N = negs.shape
     V, d = w_in.shape
@@ -160,52 +236,75 @@ def _sentence_sgns_tiled(w_in, w_out, tokens, negs, length, lr,
                         dtype=jnp.int32)                      # (k,)
 
     buf = jnp.zeros((rt, d), w_in.dtype)
+    buf0 = jnp.zeros((rt, d), w_in.dtype) if bags is not None else None
     r_seq = 2 * w_f + 1            # sequential store distance
+
+    has_doc = (static_id >= 0) if static_id is not None else None
+    sid_c = jnp.clip(static_id, 0, V - 1) if static_id is not None else None
+    doc0 = (jnp.where(has_doc, w_in[sid_c], 0.0)
+            if static_id is not None else None)
+    doc_val = doc0
 
     # --- preload positions 0..w_f-1 ---
     def preload(q, carry):
-        w_in, buf = carry
+        w_in, buf, buf0 = carry
         valid = q < length
-        tok = tokens[jnp.clip(q, 0, L - 1)]
-        row = jnp.where(valid, w_in[tok], buf[q % rt])
+        q_c = jnp.clip(q, 0, L - 1)
+        row = jnp.where(valid, _position_row(q_c, tokens, bags, w_in),
+                        buf[q % rt])
         buf = buf.at[q % rt].set(row)
-        return (w_in, buf)
+        if bags is not None:
+            # mirror only real loads: a clipped q aliases a live slot
+            buf0 = buf0.at[q % rt].set(jnp.where(valid, row, buf0[q % rt]))
+        return (w_in, buf, buf0)
 
-    w_in, buf = jax.lax.fori_loop(0, min(w_f, L), preload, (w_in, buf))
+    w_in, buf, buf0 = jax.lax.fori_loop(0, min(w_f, L), preload,
+                                        (w_in, buf, buf0))
 
     # ring advance pieces — slot modulus rt (rows stay resident for the
     # whole tile) but the *store schedule* is the sequential kernel's
     # (store the r-distance evictee once its windows are complete)
-    def _store(t, act, w_in, buf):
+    def _store(t, act, w_in, buf, buf0):
         q = t + w_f
         old = q - r_seq
         do_store = act & (q < length) & (old >= 0)
         old_c = jnp.clip(old, 0, L - 1)
-        store_idx = tokens[old_c]
-        store_val = jnp.where(do_store, buf[old_c % rt], w_in[store_idx])
-        return w_in.at[store_idx].set(store_val)
+        if bags is None:
+            store_idx = tokens[old_c]
+            store_val = jnp.where(do_store, buf[old_c % rt],
+                                  w_in[store_idx])
+            return w_in.at[store_idx].set(store_val)
+        slot = old_c % rt
+        delta = jnp.where(do_store, buf[slot] - buf0[slot], 0.0)
+        return _bag_scatter(w_in, bags, old_c, do_store, delta)
 
-    def _load(t, act, w_in, buf):
+    def _load(t, act, w_in, buf, buf0):
         q = t + w_f
         do_load = act & (q < length)
         q_c = jnp.clip(q, 0, L - 1)
-        load_row = jnp.where(do_load, w_in[tokens[q_c]], buf[q_c % rt])
-        return buf.at[q_c % rt].set(load_row)
+        load_row = jnp.where(do_load,
+                             _position_row(q_c, tokens, bags, w_in),
+                             buf[q_c % rt])
+        buf = buf.at[q_c % rt].set(load_row)
+        if bags is not None:
+            buf0 = buf0.at[q_c % rt].set(
+                jnp.where(do_load, load_row, buf0[q_c % rt]))
+        return buf, buf0
 
     def tile_step(i, carry):
-        w_in, w_out, buf = carry
+        w_in, w_out, buf, buf0, doc_val = carry
         t0 = i * tile
         active = t0 < length
 
         def strict_tile(carry):
             """Bit-exact sequential replay (same math and ring advance
             order as `sentence_sgns_ref`)."""
-            w_in, w_out, buf = carry
+            w_in, w_out, buf, buf0, doc_val = carry
             for w in range(tile):
                 t = t0 + w
                 act = active & (t < length)
-                w_in = _store(t, act, w_in, buf)
-                buf = _load(t, act, w_in, buf)
+                w_in = _store(t, act, w_in, buf, buf0)
+                buf, buf0 = _load(t, act, w_in, buf, buf0)
                 t_c = jnp.clip(t, 0, L - 1)
                 p = t + offsets
                 mask = act & (p >= 0) & (p < length)
@@ -213,17 +312,23 @@ def _sentence_sgns_tiled(w_in, w_out, tokens, negs, length, lr,
                 ctx = buf[slots]
                 out_idx = jnp.concatenate([tokens[t_c][None], negs[t_c]])
                 out_rows = w_out[out_idx]
+                if static_id is not None:
+                    ctx = jnp.concatenate([ctx, doc_val[None]], axis=0)
+                    mask = jnp.concatenate([mask, (act & has_doc)[None]])
                 d_ctx, d_out = window_delta(ctx, out_rows, mask, lr)
+                if static_id is not None:
+                    doc_val = doc_val + d_ctx[-1]
+                    d_ctx = d_ctx[:-1]
                 buf = buf.at[slots].add(d_ctx)
                 w_out = w_out.at[out_idx].add(jnp.where(act, d_out, 0.0))
-            return (w_in, w_out, buf)
+            return (w_in, w_out, buf, buf0, doc_val)
 
         def fused_tile(carry):
             """GEMM groups of G windows over the tile's deduplicated rows:
             the rows are read/written to the table once per tile, while
             deltas become visible between groups (mirrors `_kernel_tiled`'s
             bounded-staleness fused path)."""
-            w_in, w_out, buf = carry
+            w_in, w_out, buf, buf0, doc_val = carry
             u_vals = w_out[uniq[i]]                            # (M, d)
             u_orig = u_vals
 
@@ -235,9 +340,9 @@ def _sentence_sgns_tiled(w_in, w_out, tokens, negs, length, lr,
                 # group ring advance: window 0 store-then-load (sequential
                 # order), remaining windows load-only here / store after
                 # the GEMM once their context updates have landed
-                w_in = _store(base, g_act, w_in, buf)
+                w_in = _store(base, g_act, w_in, buf, buf0)
                 for w in range(wn):
-                    buf = _load(base + w, g_act, w_in, buf)
+                    buf, buf0 = _load(base + w, g_act, w_in, buf, buf0)
                 centers = base + jnp.arange(wn, dtype=jnp.int32)
                 p = centers[:, None] + offsets[None, :]        # (wn, k)
                 p_flat = p.reshape(-1)
@@ -253,46 +358,67 @@ def _sentence_sgns_tiled(w_in, w_out, tokens, negs, length, lr,
                 win_c = jnp.arange(wn * m, dtype=jnp.int32) // m
                 row_valid = active & p_ok & (base + win_r < length)
                 col_valid = active & (base + win_c < length)
+                if static_id is not None:
+                    # one doc row per window of the group, appended after
+                    # the position rows (group-start value for all windows
+                    # of the group — same bounded staleness as u_vals)
+                    wins = jnp.arange(wn, dtype=jnp.int32)
+                    ctx = jnp.concatenate(
+                        [ctx, jnp.broadcast_to(doc_val, (wn, d))], axis=0)
+                    win_r = jnp.concatenate([win_r, wins])
+                    row_valid = jnp.concatenate(
+                        [row_valid,
+                         g_act & has_doc & (base + wins < length)])
                 label = (jnp.arange(wn * m, dtype=jnp.int32) % m
                          == 0).astype(ctx.dtype)
                 mask = (row_valid[:, None] & col_valid[None, :]
                         & (win_r[:, None] == win_c[None, :]))
 
-                corr = ctx @ exp.T                             # (wn*k, wn*m)
+                corr = ctx @ exp.T                         # (rows, wn*m)
                 g = lr * (label[None, :] - stable_sigmoid(corr))
                 g = jnp.where(mask, g, 0.0)
-                d_ctx = g @ exp                                # (wn*k, d)
-                d_out = g.T @ ctx                              # (wn*m, d)
+                d_ctx = g @ exp                            # (rows, d)
+                d_out = g.T @ ctx                          # (wn*m, d)
 
+                if static_id is not None:
+                    doc_val = doc_val + d_ctx[wn * k:].sum(0)
+                    d_ctx = d_ctx[:wn * k]
                 buf = buf.at[slots].add(d_ctx)   # repeats accumulate
                 u_vals = u_vals.at[sc].add(d_out)
 
                 for w in range(1, wn):           # deferred group stores
-                    w_in = _store(base + w, g_act, w_in, buf)
+                    w_in = _store(base + w, g_act, w_in, buf, buf0)
 
             w_out = w_out.at[uniq[i]].add(u_vals - u_orig)
-            return (w_in, w_out, buf)
+            return (w_in, w_out, buf, buf0, doc_val)
 
         return jax.lax.cond(strict[i] != 0, strict_tile, fused_tile,
-                            (w_in, w_out, buf))
+                            (w_in, w_out, buf, buf0, doc_val))
 
-    w_in, w_out, buf = jax.lax.fori_loop(0, nt, tile_step,
-                                         (w_in, w_out, buf))
+    w_in, w_out, buf, buf0, doc_val = jax.lax.fori_loop(
+        0, nt, tile_step, (w_in, w_out, buf, buf0, doc_val))
 
     # --- flush surviving positions length-r_seq .. length-1 (increasing;
     # the r-distance store schedule leaves the same survivors as the
     # sequential kernel) ---
     def flush(kk, carry):
-        w_in, buf = carry
+        w_in, buf, buf0 = carry
         p = length - r_seq + kk
         valid = p >= 0
         p_c = jnp.clip(p, 0, L - 1)
-        idx = tokens[p_c]
-        val = jnp.where(valid, buf[jnp.mod(p_c, rt)], w_in[idx])
-        w_in = w_in.at[idx].set(val)
-        return (w_in, buf)
+        if bags is None:
+            idx = tokens[p_c]
+            val = jnp.where(valid, buf[jnp.mod(p_c, rt)], w_in[idx])
+            w_in = w_in.at[idx].set(val)
+        else:
+            slot = jnp.mod(p_c, rt)
+            delta = jnp.where(valid, buf[slot] - buf0[slot], 0.0)
+            w_in = _bag_scatter(w_in, bags, p_c, valid, delta)
+        return (w_in, buf, buf0)
 
-    w_in, buf = jax.lax.fori_loop(0, r_seq, flush, (w_in, buf))
+    w_in, buf, buf0 = jax.lax.fori_loop(0, r_seq, flush, (w_in, buf, buf0))
+    if static_id is not None:
+        w_in = w_in.at[sid_c].add(jnp.where(has_doc, doc_val - doc0, 0.0))
     return w_in, w_out
 
 
@@ -312,6 +438,8 @@ def batch_sgns_tiled_ref(
     ucount: jax.Array,    # (S, nt)
     strict: jax.Array,    # (S, nt)
     gemm_windows: int = 0,   # windows per GEMM group; 0 -> min(tile, 4)
+    static_ids=None,      # (S,) int32 doc rows per sentence, -1 = none
+    bags=None,            # (S, L, B) int32 bag members, -1 padded
 ) -> Tuple[jax.Array, jax.Array]:
     """Sequential pass over a batch with the tiled (T windows per step)
     semantics — the oracle for `fullw2v.fullw2v_pallas_tiled`."""
@@ -320,14 +448,16 @@ def batch_sgns_tiled_ref(
 
     def body(carry, xs):
         w_in, w_out = carry
-        toks, ngs, ln, uq, sc, uc, st = xs
+        toks, ngs, ln, uq, sc, uc, st, sid, bg = xs
         w_in, w_out = _sentence_sgns_tiled(w_in, w_out, toks, ngs, ln, lr,
                                            uq, sc, uc, st,
                                            w_f=w_f, tile=tile,
-                                           gemm_windows=G)
+                                           gemm_windows=G,
+                                           static_id=sid, bags=bg)
         return (w_in, w_out), None
 
     (w_in, w_out), _ = jax.lax.scan(
         body, (w_in, w_out),
-        (tokens, negs, lengths, uniq, scatter, ucount, strict))
+        (tokens, negs, lengths, uniq, scatter, ucount, strict,
+         static_ids, bags))
     return w_in, w_out

@@ -46,7 +46,10 @@ class StepInputs:
     stochastic-rounding key (``kernels.quant.round_key`` — a pure function
     of ``(seed, epoch, batch_index)``) and is attached only when the
     session's :class:`~repro.kernels.tables.TableSpec` stores a table
-    below f32."""
+    below f32. ``static_ctx``/``bags`` carry the workload-frontend
+    extensions (DESIGN.md §12): a per-sentence always-in-window extra
+    context row (doc2vec PV-DM) and per-position subword bag members
+    (fastText-style n-gram bags), both already in table-row space."""
     tokens: jax.Array                       # (S, L) int32
     negs: jax.Array                         # (S, L, N) int32
     lengths: jax.Array                      # (S,) int32
@@ -59,6 +62,8 @@ class StepInputs:
     bucket_ids: Optional[jax.Array] = None    # (n, n, C) int32, -1 pad
     bucket_pos: Optional[jax.Array] = None    # (n, n, C) int32, R pad
     round_key: Optional[jax.Array] = None     # (2,) uint32 threefry key
+    static_ctx: Optional[jax.Array] = None    # (S,) int32 doc rows, -1 pad
+    bags: Optional[jax.Array] = None          # (S, L, B) int32, -1 pad
 
     @property
     def has_plan(self) -> bool:
@@ -69,6 +74,16 @@ class StepInputs:
     def has_vocab_shard(self) -> bool:
         """Whether this step carries a vocab-sharding exchange plan."""
         return self.cold_ids is not None
+
+    @property
+    def has_static_ctx(self) -> bool:
+        """Whether this step carries per-sentence static context rows."""
+        return self.static_ctx is not None
+
+    @property
+    def has_bags(self) -> bool:
+        """Whether this step carries per-position subword bag members."""
+        return self.bags is not None
 
     @property
     def tile(self) -> int:
@@ -91,6 +106,10 @@ class StepInputs:
                       plan_scatter=jnp.asarray(p.scatter),
                       plan_ucount=jnp.asarray(p.ucount),
                       plan_strict=jnp.asarray(p.strict))
+        if getattr(batch, "docs", None) is not None:
+            kw["static_ctx"] = jnp.asarray(batch.docs)
+        if getattr(batch, "bags", None) is not None:
+            kw["bags"] = jnp.asarray(batch.bags)
         return cls(tokens=jnp.asarray(batch.tokens),
                    negs=jnp.asarray(batch.negs),
                    lengths=jnp.asarray(batch.lengths),
@@ -101,7 +120,8 @@ jax.tree_util.register_dataclass(
     StepInputs,
     data_fields=["tokens", "negs", "lengths", "lr", "plan_uniq",
                  "plan_scatter", "plan_ucount", "plan_strict", "cold_ids",
-                 "bucket_ids", "bucket_pos", "round_key"],
+                 "bucket_ids", "bucket_pos", "round_key", "static_ctx",
+                 "bags"],
     meta_fields=[])
 
 
@@ -149,6 +169,11 @@ class KernelBackend:
     # Backends missing a dtype still run it under the f32 master-copy
     # fallback (TableSpec.master_copy) — resolve() spells that out.
     supports_dtypes: Tuple[str, ...] = ("float32",)
+    # frontend features (DESIGN.md §12) the update() consumes when present
+    # on StepInputs: "static_ctx" (doc2vec always-in-window row), "bags"
+    # (fastText subword bag members). Backends not declaring a feature
+    # must not be handed a step carrying it — resolve() enforces this.
+    supports_frontends: Tuple[str, ...] = ()
     requires_tpu: bool = False        # compiles natively only on TPU
     tiled_variant: Optional[str] = None      # name of the tiled counterpart
     interpret_variant: Optional[str] = None  # interpret-mode escape hatch
@@ -207,6 +232,7 @@ def cli_choices() -> List[str]:
 
 def resolve(name: str, *, tiled: bool = False, vocab_shard: bool = False,
             dtypes: Tuple[str, ...] = (),
+            frontends: Tuple[str, ...] = (),
             platform: Optional[str] = None) -> KernelBackend:
     """Resolve a backend name against the registry for this step shape.
 
@@ -226,6 +252,10 @@ def resolve(name: str, *, tiled: bool = False, vocab_shard: bool = False,
       storage dtype in the resolved backend's ``supports_dtypes``.
       Callers running the f32 master-copy fallback pass ``()`` — the
       fallback feeds the backend plain f32 tables.
+    * ``frontends`` (a workload's required feature set, e.g.
+      ``("static_ctx",)``) requires every feature in the resolved
+      backend's ``supports_frontends`` — workload steps carry extra
+      ``StepInputs`` fields the kernel must consume (DESIGN.md §12).
     * Invalid combinations (a plan-consuming backend without a plan, a
       TPU-only backend off-TPU, a vocab-shard-incapable backend on a
       sharded step, an unknown name) raise ``ValueError`` with the fix
@@ -234,7 +264,7 @@ def resolve(name: str, *, tiled: bool = False, vocab_shard: bool = False,
     _ensure_registered()
     platform = platform or jax.default_backend()
     if name == "auto":
-        if platform == "tpu":
+        if platform == "tpu" and not frontends:
             name = ("pallas_tiled" if tiled else
                     "pallas" if vocab_shard else "pallas_pipelined")
         else:
@@ -284,6 +314,17 @@ def resolve(name: str, *, tiled: bool = False, vocab_shard: bool = False,
             f"TableSpec(master_copy=True)) — tables then dequantize to f32 "
             f"around the unmodified step (correct, but no exchange-byte "
             f"win)")
+    missing_fe = [f for f in frontends if f not in be.supports_frontends]
+    if missing_fe:
+        capable = ', '.join(
+            n for n in _REGISTRY
+            if all(f in _REGISTRY[n].supports_frontends for f in frontends)
+            and _REGISTRY[n].needs_plan == be.needs_plan) or "<none>"
+        raise ValueError(
+            f"backend {be.name!r} does not consume the frontend feature(s) "
+            f"{', '.join(missing_fe)} this workload's steps carry "
+            f"(DESIGN.md §12); pick a capable backend ({capable}) or run "
+            f"the plain w2v workload")
     if be.requires_tpu and platform != "tpu":
         hint = (f"use {be.interpret_variant!r} (interpret mode: identical "
                 f"semantics, correctness-only speed) or "

@@ -34,10 +34,10 @@ def _tables_shards(tables: str) -> int:
 def run_w2v(args) -> int:
     import hashlib
 
+    from repro import frontends
     from repro.configs.w2v import W2VConfig
     from repro.core.quality import evaluate
     from repro.core.trainer import TrainSession
-    from repro.data.corpus import synthetic_cluster_corpus
     from repro.data.prefetch import AsyncBatchingPipeline, make_pipeline
 
     cfg = W2VConfig(dim=args.dim, epochs=args.epochs, min_count=1,
@@ -54,14 +54,23 @@ def run_w2v(args) -> int:
                     vocab_shard=bool(args.vocab_shard),
                     hot_vocab_frac=args.hot_vocab_frac,
                     tables=args.tables)
-    words_per_cluster = max(args.vocab // args.clusters, 1)
-    corpus = synthetic_cluster_corpus(
-        n_clusters=args.clusters, words_per_cluster=words_per_cluster,
-        n_sentences=args.sentences, mean_len=24, seed=0)
+    # every workload rides the same engine: the frontend adapts a corpus
+    # (words, graph walks, documents, subword bags) into the batch schema
+    # and attaches its table extras to the pipeline (DESIGN.md §12)
+    workload = frontends.get(args.workload).build(
+        cfg, vocab=args.vocab, clusters=args.clusters,
+        sentences=args.sentences,
+        p=args.node2vec_p, q=args.node2vec_q,
+        walk_length=args.walk_length, walks_per_node=args.walks_per_node,
+        docs=args.docs, buckets=args.subword_buckets, seed=0)
+    cfg, corpus = workload.cfg, workload.corpus
     pipe = make_pipeline(corpus, cfg)
-    print(f"vocab={pipe.vocab.size} params="
-          f"{2 * pipe.vocab.size * cfg.dim / 1e6:.1f}M words/epoch="
-          f"{pipe.epoch_words}")
+    workload.attach(pipe)
+    extras = (f" (+{pipe.extra_rows} {args.workload} rows)"
+              if pipe.extra_rows else "")
+    print(f"workload={args.workload} vocab={pipe.vocab.size}{extras} "
+          f"params={2 * pipe.table_rows * cfg.dim / 1e6:.1f}M "
+          f"words/epoch={pipe.epoch_words}")
     if isinstance(pipe, AsyncBatchingPipeline):
         print(f"pipeline=async(workers={pipe.workers} depth={pipe.depth} "
               f"mode={pipe.mode})")
@@ -125,11 +134,14 @@ def run_w2v(args) -> int:
         if part is not None:
             digest.update(np.asarray(part).tobytes())
     print(f"final_digest={digest.hexdigest()}")
-    inv = np.zeros(pipe.vocab.size, dtype=int)
-    for w, i in pipe.vocab.ids.items():
-        inv[i] = corpus.clusters[w]
-    metrics = evaluate(trainer.embeddings(), inv)
-    print("quality:", {k: round(v, 4) for k, v in metrics.items()})
+    if corpus.clusters is not None:
+        inv = np.zeros(pipe.vocab.size, dtype=int)
+        for w, i in pipe.vocab.ids.items():
+            inv[i] = corpus.clusters[w]
+        # frontend extras (doc rows, n-gram buckets) sit past the
+        # vocabulary — cluster quality is a word/node-vector property
+        metrics = evaluate(trainer.embeddings()[:pipe.vocab.size], inv)
+        print("quality:", {k: round(v, 4) for k, v in metrics.items()})
     return 0
 
 
@@ -161,6 +173,28 @@ def main() -> int:
     sub = ap.add_subparsers(dest="mode", required=True)
 
     w = sub.add_parser("w2v")
+    from repro import frontends
+    w.add_argument("--workload", default="w2v",
+                   choices=frontends.names(),
+                   help="workload frontend (DESIGN.md §12): plain w2v, "
+                        "node2vec random walks, PV-DM doc2vec, or "
+                        "fastText-style subword bags — all through the "
+                        "same engine, batching, sharding, and serving")
+    w.add_argument("--node2vec-p", type=float, default=1.0,
+                   help="node2vec return parameter (1/p weight on "
+                        "backtracking to the previous node)")
+    w.add_argument("--node2vec-q", type=float, default=0.5,
+                   help="node2vec in-out parameter (1/q weight on "
+                        "exploring away; q<1 favors communities)")
+    w.add_argument("--walk-length", type=int, default=40,
+                   help="node2vec: nodes per walk")
+    w.add_argument("--walks-per-node", type=int, default=10,
+                   help="node2vec: walks started from each node")
+    w.add_argument("--docs", type=int, default=64,
+                   help="doc2vec: number of synthetic documents")
+    w.add_argument("--subword-buckets", type=int, default=4096,
+                   help="subword: hashed n-gram bucket rows appended "
+                        "past the vocabulary")
     w.add_argument("--vocab", type=int, default=8192)
     w.add_argument("--clusters", type=int, default=64)
     w.add_argument("--sentences", type=int, default=20000)

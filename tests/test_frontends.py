@@ -1,0 +1,500 @@
+"""Workload-frontend tests (DESIGN.md §12).
+
+Covers, per frontend (node2vec / doc2vec / subword):
+  * jnp-oracle parity against the tiled kernels — T=1 bit-identity (with
+    the distinct-negative invariant the repo's other bit-identity tests
+    rely on), T=8 within the bounded-staleness tolerance,
+  * 2-shard vocab-sharded determinism digests (subprocess mesh),
+  * adapter property tests (vendored hypothesis shim): walk determinism
+    under p/q extremes and degenerate graphs, n-gram hash round-trip and
+    bucket bounds, doc-row window coverage,
+  * the data/batching.py document-boundary regression (stream packing
+    must flush at document boundaries — windows at sentence start/end
+    must not borrow context across documents when a static doc row pads
+    the window),
+  * serve queryability: doc/node vectors reachable through
+    ``EmbeddingIndex``.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro import frontends
+from repro.configs.w2v import smoke
+from repro.data.batching import BatchingPipeline, plan_tiles
+from repro.data.corpus import Corpus
+from tests.conftest import make_distinct_negs
+
+
+def _workload(name, **knobs):
+    """A small instance of one registered frontend + its attached pipeline."""
+    base = smoke(dim=16, sentences_per_batch=8, max_sentence_len=16,
+                 **knobs.pop("cfg", {}))
+    defaults = {
+        "doc2vec": dict(docs=6, sents_per_doc=5, clusters=3,
+                        words_per_cluster=8, mean_len=8),
+        "subword": dict(vocab=48, clusters=6, sentences=120, mean_len=10,
+                        buckets=64),
+        "node2vec": dict(communities=4, nodes_per=6, walks_per_node=2,
+                         walk_length=12),
+        "w2v": dict(vocab=48, clusters=6, sentences=120, mean_len=10),
+    }[name]
+    defaults.update(knobs)
+    wl = frontends.get(name).build(base, **defaults)
+    pipe = BatchingPipeline(wl.corpus, wl.cfg)
+    wl.attach(pipe)
+    return wl, pipe
+
+
+WORKLOADS = ("node2vec", "doc2vec", "subword")
+
+
+# ---------------------------------------------------------------------------
+# data/batching.py document-boundary regression (written before the fix).
+# ---------------------------------------------------------------------------
+
+def _doc_of(corpus: Corpus):
+    """raw token -> owning doc id (tokens are unique per doc here)."""
+    owner = {}
+    for sent, doc in zip(corpus.sentences, corpus.doc_ids):
+        for w in sent:
+            owner[w] = doc
+    return owner
+
+
+def test_stream_packing_flushes_at_doc_boundaries():
+    """ignore_delimiters packs the encoded stream into pseudo-sentences;
+    with per-sentence doc ids attached, that packing must flush at every
+    document boundary — otherwise windows near the join borrow context
+    from the neighbouring document (and the whole row would carry one doc
+    id for tokens of two documents)."""
+    corpus = Corpus(
+        sentences=[[1, 2, 3], [4, 5], [6, 7, 8], [9, 10], [11, 12, 13]],
+        vocab_size=14,
+        doc_ids=[0, 0, 1, 1, 2],
+    )
+    cfg = smoke(ignore_delimiters=True, max_sentence_len=4,
+                sentences_per_batch=8)
+    pipe = BatchingPipeline(corpus, cfg)
+    owner = _doc_of(corpus)
+    inv = {i: w for w, i in pipe.vocab.ids.items()}
+    rows = 0
+    for batch in pipe.batches(epoch=0):
+        assert batch.docs is not None
+        for s in range(batch.tokens.shape[0]):
+            ln = int(batch.lengths[s])
+            if ln == 0:
+                continue
+            rows += 1
+            raw = [inv[int(t)] for t in batch.tokens[s, :ln]]
+            docs_here = {owner[w] for w in raw}
+            # the regression: one packed row (= one kernel sentence, one
+            # context window span) must never mix documents
+            assert len(docs_here) == 1, (
+                f"packed row {raw} spans documents {sorted(docs_here)}")
+            assert int(batch.docs[s]) == pipe.vocab.size + docs_here.pop()
+    assert rows > 0
+
+
+def test_doc_rows_follow_sentences_without_packing():
+    """Plain (non-packing) mode: every emitted row carries its sentence's
+    doc id, mapped into table-extra space (vocab.size + doc)."""
+    corpus = Corpus(sentences=[[1, 2, 3, 4], [5, 6], [7, 8, 9]],
+                    vocab_size=10, doc_ids=[3, 1, 3])
+    cfg = smoke(max_sentence_len=8, sentences_per_batch=4)
+    pipe = BatchingPipeline(corpus, cfg)
+    owner = _doc_of(corpus)
+    inv = {i: w for w, i in pipe.vocab.ids.items()}
+    seen = 0
+    for batch in pipe.batches(epoch=0):
+        for s in range(batch.tokens.shape[0]):
+            ln = int(batch.lengths[s])
+            if ln == 0:
+                # padding rows carry no doc
+                assert int(batch.docs[s]) == -1
+                continue
+            seen += 1
+            doc = owner[inv[int(batch.tokens[s, 0])]]
+            assert int(batch.docs[s]) == pipe.vocab.size + doc
+    assert seen == 3
+
+
+# ---------------------------------------------------------------------------
+# Registry surface + backend gating
+# ---------------------------------------------------------------------------
+
+def test_registry_names_w2v_first_and_complete():
+    from repro.frontends.registry import FrontendSpec
+    ns = frontends.names()
+    assert ns[0] == "w2v"
+    assert set(ns) == {"w2v", "doc2vec", "node2vec", "subword"}
+    assert [s.name for s in frontends.specs()] == list(ns)
+    for s in frontends.specs():
+        assert isinstance(s, FrontendSpec)
+        assert s.description and s.corpus   # the docs table is generated
+
+
+def test_registry_unknown_frontend_actionable():
+    with pytest.raises(ValueError, match="unknown workload frontend"):
+        frontends.get("glove")
+
+
+def test_frontend_steps_reject_incapable_backend():
+    """A workload whose steps carry frontend extensions must not resolve
+    onto a kernel that would silently drop them (DESIGN.md §12 gating)."""
+    from repro.core.trainer import TrainSession
+    wl, pipe = _workload("doc2vec")
+    with pytest.raises(ValueError, match="frontend feature"):
+        TrainSession(pipe, wl.cfg, backend="pallas_pipelined")
+
+
+def test_builds_accept_and_ignore_foreign_knobs():
+    """The CLI hands every workload knob to every frontend; builds must
+    take their own and ignore the rest."""
+    cfg = smoke(dim=16)
+    wl = frontends.get("doc2vec").build(cfg, docs=4, buckets=123, p=9.0)
+    assert wl.name == "doc2vec"
+
+
+# ---------------------------------------------------------------------------
+# jnp-oracle parity: sequential vs tiled reference on REAL frontend batches
+# (the jnp/jnp_tiled backends *are* these references; pallas kernels are
+# gated out by `supports_frontends`).
+# ---------------------------------------------------------------------------
+
+def _frontend_step_args(name, rng):
+    """One real batch of the workload, with kernel-invariant negatives:
+    bit-identity between the sequential and T=1 tiled paths requires the
+    per-window distinct-negative invariant (conftest.make_distinct_negs),
+    which the production sampler relaxes."""
+    wl, pipe = _workload(name)
+    batch = next(pipe.batches(pad_len=wl.cfg.resolved_pad_len, epoch=0))
+    tokens = np.asarray(batch.tokens)
+    lengths = np.asarray(batch.lengths)
+    negs = make_distinct_negs(rng, tokens, pipe.vocab.size, 3)
+    rows = pipe.table_rows
+    w_in = rng.normal(size=(rows, 32)).astype(np.float32) * 0.1
+    w_out = rng.normal(size=(rows, 32)).astype(np.float32) * 0.1
+    docs = None if batch.docs is None else np.asarray(batch.docs)
+    bags = None if batch.bags is None else np.asarray(batch.bags)
+    return w_in, w_out, tokens, negs, lengths, docs, bags
+
+
+def _run_refs(w_in, w_out, tokens, negs, lengths, docs, bags, tile):
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import batch_sgns_ref, batch_sgns_tiled_ref
+    kw = {}
+    if docs is not None:
+        kw["static_ids"] = jnp.asarray(docs)
+    if bags is not None:
+        kw["bags"] = jnp.asarray(bags)
+    def common():
+        # fresh device tables per call — the refs donate their table args
+        return (jnp.asarray(w_in), jnp.asarray(w_out), jnp.asarray(tokens),
+                jnp.asarray(negs), jnp.asarray(lengths), jnp.float32(0.05), 2)
+
+    seq = batch_sgns_ref(*common(), **kw)
+    plan = plan_tiles(tokens, negs, lengths, tile)
+    pa = [jnp.asarray(x) for x in (plan.uniq, plan.scatter,
+                                   plan.ucount, plan.strict)]
+    tiled = batch_sgns_tiled_ref(*common(), tile, *pa, **kw)
+    return seq, tiled
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_frontend_t1_tiled_bit_identical(name, rng):
+    """T=1 tiled path == sequential oracle, bit for bit, with the doc row /
+    bag extensions live (the §12 analogue of the kernel acceptance test)."""
+    seq, tiled = _run_refs(*_frontend_step_args(name, rng), tile=1)
+    assert (np.asarray(seq[0]) == np.asarray(tiled[0])).all()
+    assert (np.asarray(seq[1]) == np.asarray(tiled[1])).all()
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_frontend_t8_tiled_within_tolerance(name, rng):
+    """T=8 relaxes ordering inside collision-free tiles; the divergence
+    from the sequential oracle must stay O(lr²)-bounded with frontend
+    extensions live (doc rows join every tile, bags amplify row reuse)."""
+    seq, tiled = _run_refs(*_frontend_step_args(name, rng), tile=8)
+    for a, b in zip(seq, tiled):
+        a, b = np.asarray(a), np.asarray(b)
+        assert np.isfinite(b).all()
+        assert np.abs(a - b).max() < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Determinism: prefetch-worker invariance (in-process) and 2-shard
+# vocab-sharded digests (subprocess mesh).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_async_batches_bitwise_equal_sync(name):
+    """Frontend batches — docs and bags included — are pure functions of
+    (corpus, cfg, epoch, index): any prefetch worker count must reproduce
+    the sync stream bit for bit."""
+    from repro.data.prefetch import AsyncBatchingPipeline
+    wl, pipe = _workload(name)
+    ref = list(pipe.batches(pad_len=wl.cfg.resolved_pad_len, epoch=0))
+    assert ref
+    apipe = AsyncBatchingPipeline(wl.corpus, wl.cfg, vocab=pipe.vocab,
+                                  workers=3, depth=2)
+    wl.attach(apipe)
+    got = list(apipe.batches(pad_len=wl.cfg.resolved_pad_len, epoch=0))
+    assert len(got) == len(ref)
+    for x, y in zip(ref, got):
+        for f in ("tokens", "negs", "lengths", "docs", "bags"):
+            a, b = getattr(x, f), getattr(y, f)
+            assert (a is None) == (b is None), f
+            if a is not None:
+                assert np.array_equal(a, b), f
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_two_shard_digest_deterministic(name, subproc):
+    """On a 2-shard mesh each workload must train to the same table digest
+    across (a) a repeat run and (b) a 2-worker prefetch run — the sharded
+    exchange carries doc rows and bag members (always in the zero-count
+    cold tail) without breaking bit-determinism."""
+    code = f"""
+    import hashlib
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro import frontends
+    from repro.configs.w2v import smoke
+    from repro.core.trainer import TrainSession
+    from repro.data.batching import BatchingPipeline
+    from repro.data.prefetch import AsyncBatchingPipeline
+
+    def digest(workers):
+        cfg = smoke(dim=16, sentences_per_batch=8, max_sentence_len=16,
+                    vocab_shard=True, hot_vocab_frac=0.3)
+        wl = frontends.get({name!r}).build(
+            cfg, docs=6, sents_per_doc=5, clusters=3, words_per_cluster=8,
+            mean_len=8, vocab=48, sentences=120, buckets=64,
+            communities=4, nodes_per=6, walks_per_node=2, walk_length=12)
+        if workers:
+            pipe = AsyncBatchingPipeline(wl.corpus, wl.cfg, workers=workers,
+                                         depth=2)
+        else:
+            pipe = BatchingPipeline(wl.corpus, wl.cfg)
+        wl.attach(pipe)
+        mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+        s = TrainSession(pipe, wl.cfg, backend="jnp", mesh=mesh)
+        assert s.placement is not None and s.placement.n_shards == 2
+        s.train(max_batches=2)
+        e = np.ascontiguousarray(s.embeddings())
+        return hashlib.sha1(e.tobytes()).hexdigest()
+
+    a, b, c = digest(0), digest(0), digest(2)
+    assert a == b == c, (a, b, c)
+    print("digest", a)
+    """
+    r = subproc(code, n_devices=2)
+    assert r.returncode == 0, r.stderr
+    assert "digest" in r.stdout
+
+
+def test_mixed_precision_tables_compose_with_bags():
+    """--tables mixed precision composes with a frontend: the int8 cold
+    tail holds the n-gram bucket rows (zero-count ids), and training still
+    runs to finite tables."""
+    from repro.core.trainer import TrainSession
+    wl, pipe = _workload(
+        "subword", cfg={"tables": "hot=bf16:frac=0.25,cold=int8,shards=1"})
+    sess = TrainSession(pipe, wl.cfg, backend="jnp")
+    sess.train(max_batches=2)
+    emb = sess.embeddings()
+    assert emb.shape[0] == pipe.table_rows
+    assert np.isfinite(emb).all()
+
+
+# ---------------------------------------------------------------------------
+# node2vec adapter properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([1e-6, 1e-3, 1.0, 1e3, 1e6]),
+       st.sampled_from([1e-6, 1.0, 1e6]))
+@settings(max_examples=10, deadline=None)
+def test_walk_determinism_under_pq_extremes(seed, p, q):
+    """The same keyed rng must reproduce the same walk for any positive
+    p/q — including extremes where one bias weight dwarfs the others (the
+    cumsum sampler must not degenerate) — and every hop must be an edge."""
+    from repro.frontends.node2vec import community_graph, node2vec_walk
+    g = community_graph(n_communities=3, nodes_per=5, seed=1)
+    walks = [node2vec_walk(g, 2, 20, p, q,
+                           np.random.default_rng(
+                               np.random.SeedSequence([seed, 7])))
+             for _ in range(2)]
+    assert walks[0] == walks[1]
+    w = walks[0]
+    assert len(w) == 20 and all(0 <= v < g.n_nodes for v in w)
+    for a, b in zip(w, w[1:]):
+        assert b in g.neighbors(a)
+
+
+def test_walk_degenerate_graphs():
+    from repro.frontends.node2vec import Graph, node2vec_walk
+    rng = np.random.default_rng(0)
+    # isolated node: the walk stops at its sink immediately
+    lonely = Graph.from_edges([], n_nodes=1)
+    assert node2vec_walk(lonely, 0, 10, 1.0, 1.0, rng) == [0]
+    # self-loop-only node: the walk revisits it for the full length (the
+    # return weight 1/p applies but there is nowhere else to go)
+    loop = Graph.from_edges([(0, 0)], n_nodes=1)
+    assert node2vec_walk(loop, 0, 10, 0.25, 4.0, rng) == [0] * 10
+
+
+def test_walk_corpus_keyed_per_walk_and_rejects_bad_pq():
+    from repro.frontends.node2vec import community_graph, walk_corpus
+    g = community_graph(n_communities=2, nodes_per=4, seed=0)
+    a = walk_corpus(g, walks_per_node=2, walk_length=8, p=0.5, q=2.0, seed=3)
+    b = walk_corpus(g, walks_per_node=2, walk_length=8, p=0.5, q=2.0, seed=3)
+    assert a.sentences == b.sentences          # pure in (graph, knobs, seed)
+    c = walk_corpus(g, walks_per_node=2, walk_length=8, p=0.5, q=2.0, seed=4)
+    assert a.sentences != c.sentences          # and the seed matters
+    with pytest.raises(ValueError, match="positive"):
+        walk_corpus(g, p=0.0, q=1.0)
+
+
+# ---------------------------------------------------------------------------
+# subword adapter properties
+# ---------------------------------------------------------------------------
+
+def test_fnv1a_known_answers():
+    """Pinned FNV-1a 32-bit vectors: the bucket layout must be identical
+    on every host/worker (no PYTHONHASHSEED exposure)."""
+    from repro.frontends.subword import fnv1a
+    assert fnv1a(b"") == 0x811C9DC5
+    assert fnv1a(b"a") == 0xE40C292C
+    assert fnv1a(b"foobar") == 0xBF9CF968
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 12),
+       st.sampled_from([16, 64, 1024]))
+@settings(max_examples=15, deadline=None)
+def test_ngram_roundtrip_and_bucket_bounds(seed, length, buckets):
+    """The minn-gram sequence reconstructs ``<word>`` exactly (no n-gram
+    lost or reordered), and every hashed bucket is in range and pure."""
+    from repro.frontends.subword import ngram_bucket, word_ngrams
+    rng = np.random.default_rng(seed)
+    word = "".join(chr(97 + int(x)) for x in rng.integers(0, 26, length))
+    grams = word_ngrams(word, minn=3, maxn=5)
+    w = f"<{word}>"
+    n3 = [g for g in grams if len(g) == 3]
+    assert "".join([n3[0]] + [g[-1] for g in n3[1:]]) == w
+    assert all(3 <= len(g) <= 5 and g in w for g in grams)
+    for g in grams:
+        b = ngram_bucket(g, buckets)
+        assert 0 <= b < buckets
+        assert b == ngram_bucket(g, buckets)
+
+
+def test_bag_table_membership_and_truncation():
+    from repro.frontends.subword import build_bag_table, word_ngrams
+    _, pipe = _workload("subword", buckets=32)
+    V, table = pipe.vocab.size, pipe.bag_table
+    assert table.shape[0] == V and pipe.extra_rows == 32
+    # member 0 is the word's own row; the rest are in-range bucket rows
+    np.testing.assert_array_equal(table[:, 0], np.arange(V))
+    tail = table[:, 1:]
+    valid = tail >= 0
+    assert ((tail[valid] >= V) & (tail[valid] < V + 32)).all()
+    # -1 padding is a strict suffix per row, and the valid count is exactly
+    # 1 + #ngrams (duplicate buckets are *kept* — fastText semantics)
+    inv = {i: w for w, i in pipe.vocab.ids.items()}
+    for i in range(V):
+        row_valid = table[i] >= 0
+        k = int(row_valid.sum())
+        assert row_valid[:k].all() and not row_valid[k:].any()
+        assert k == 1 + len(word_ngrams(str(inv[i])))
+    capped = build_bag_table(pipe.vocab, 32, max_members=3)
+    assert capped.shape[1] == 3
+    np.testing.assert_array_equal(capped[:, 0], np.arange(V))
+
+
+# ---------------------------------------------------------------------------
+# doc2vec adapter properties
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1), st.booleans())
+@settings(max_examples=6, deadline=None)
+def test_doc_row_coverage_exact(seed, pack):
+    """Every encoded token of every document reaches the kernels in a row
+    labelled with that document's table row — across both packing modes,
+    with nothing dropped, duplicated, or relabelled. This is the window-
+    coverage precondition: the kernel injects ``docs[s]`` into every
+    window of row s, so row labels ⇒ full per-document window coverage."""
+    from repro.frontends.doc2vec import document_corpus
+    rng = np.random.default_rng(seed)
+    corpus = document_corpus(n_docs=int(rng.integers(2, 6)),
+                             sents_per_doc=int(rng.integers(2, 5)),
+                             n_clusters=2, words_per_cluster=6,
+                             mean_len=6, seed=seed)
+    cfg = smoke(dim=16, sentences_per_batch=4, max_sentence_len=8,
+                ignore_delimiters=pack, min_count=1, subsample_t=0.0)
+    pipe = BatchingPipeline(corpus, cfg)
+    # both modes split streams into max-len rows and drop a trailing
+    # length-1 chunk (it has no window); packing chunks per *document*,
+    # plain mode per sentence
+    units = collections.defaultdict(list)
+    for i, (sent, doc) in enumerate(zip(corpus.sentences, corpus.doc_ids)):
+        units[doc if pack else (doc, i)].extend(
+            pipe.vocab.ids[w] for w in sent)
+    want = collections.Counter()
+    for key, toks in units.items():
+        doc = key if pack else key[0]
+        if len(toks) % cfg.max_sentence_len == 1:
+            toks = toks[:-1]
+        for t in toks:
+            want[(doc, t)] += 1
+    got = collections.Counter()
+    for batch in pipe.batches(epoch=0):
+        for s in range(batch.tokens.shape[0]):
+            ln = int(batch.lengths[s])
+            if ln == 0:
+                continue
+            doc = int(batch.docs[s]) - pipe.vocab.size
+            assert doc >= 0
+            for t in batch.tokens[s, :ln]:
+                got[(doc, int(t))] += 1
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Serve queryability: doc vectors through EmbeddingIndex
+# ---------------------------------------------------------------------------
+
+def test_doc_vectors_queryable_via_embedding_index():
+    """A doc2vec session serves through the unchanged serving stack: the
+    index covers the doc rows past the vocabulary, its table is the
+    normalized trainer table, and sharded top-k over *doc* query ids
+    matches the dense oracle exactly."""
+    from repro.core.trainer import TrainSession
+    from repro.serve.index import EmbeddingIndex
+    from repro.serve.query import dense_topk, make_topk_fn
+    wl, pipe = _workload("doc2vec")
+    sess = TrainSession(pipe, wl.cfg, backend="jnp")
+    sess.train(max_batches=3)
+    idx = EmbeddingIndex.from_session(sess)
+    V = pipe.vocab.size
+    assert idx.vocab_size == pipe.table_rows == V + 6
+    emb = sess.embeddings()
+    norm = emb / np.maximum(np.linalg.norm(emb, axis=1, keepdims=True),
+                            1e-12)
+    np.testing.assert_allclose(idx.dense_embeddings(), norm, atol=1e-6)
+    doc_ids = np.arange(V, V + 6, dtype=np.int32)
+    fn = make_topk_fn(idx.placement, idx.mesh, mode="nn", k=5)
+    got_ids, got_sc = fn(idx.hot, idx.cold, doc_ids)
+    want_ids, want_sc = dense_topk(idx.dense_embeddings(), doc_ids, k=5,
+                                   mode="nn")
+    np.testing.assert_array_equal(np.asarray(got_ids), want_ids)
+    np.testing.assert_allclose(np.asarray(got_sc), want_sc, atol=1e-6)

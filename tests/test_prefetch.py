@@ -127,11 +127,11 @@ def test_backpressure_bounds_in_flight_batches():
 def test_worker_exception_propagates_and_shuts_down(monkeypatch):
     import repro.data.prefetch as prefetch_mod
 
-    def boom(packed, cfg, sampler, epoch):
+    def boom(packed, cfg, sampler, epoch, placement=None, bag_table=None):
         if packed.index >= 2:
             raise RuntimeError("injected finalize failure")
         return prefetch_mod.finalize_packed.__wrapped__(
-            packed, cfg, sampler, epoch)
+            packed, cfg, sampler, epoch, placement, bag_table)
 
     boom.__wrapped__ = prefetch_mod.finalize_packed
     monkeypatch.setattr(prefetch_mod, "finalize_packed", boom)
